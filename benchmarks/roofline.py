@@ -1,0 +1,97 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json and derives, per (arch x shape x mesh):
+compute / memory / collective terms (seconds), the dominant bottleneck,
+MODEL_FLOPS = 6*N*D (train) or 2*N_active*tokens (serve), and the
+useful-compute ratio. Markdown + CSV emitters feed EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config, get_shape
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+# XLA cost_analysis counts one FLOP per MAC in dots; calibration factor
+# measured by benchmarks.run --calibrate (see EXPERIMENTS.md §Roofline).
+XLA_FLOP_PER_MAC = 2.0
+
+
+def active_params(cfg):
+    from repro.models import model_zoo
+    n = model_zoo.build(cfg, s_max=128).n_params()
+    if cfg.moe is None:
+        return n, n
+    m = cfg.moe
+    # expert params scale by top_k / n_experts when active
+    expert = (cfg.n_layers // m.every) * m.n_experts * (
+        (3 if cfg.act in ("swiglu", "geglu") else 2) * cfg.d_model * m.d_ff)
+    active = n - expert + expert * m.top_k / m.n_experts
+    return n, int(active)
+
+
+def model_flops(cfg, shape):
+    n, n_active = active_params(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2 * n_active * tokens
+    return 2 * n_active * shape.global_batch  # decode: one token per request
+
+
+def load_records(mesh="sp", tag=""):
+    recs = []
+    suffix = f"--{mesh}{'-' + tag if tag else ''}.json"
+    for f in sorted(glob.glob(os.path.join(ART, f"*{suffix}"))):
+        r = json.load(open(f))
+        if "error" in r:
+            recs.append(r)
+            continue
+        cfg = get_config(r["arch"])
+        shape = get_shape(r["shape"])
+        mf = model_flops(cfg, shape)
+        hlo_global = r["per_device"]["flops"] * r["chips"] * 2 / XLA_FLOP_PER_MAC
+        r["model_flops"] = mf
+        r["useful_ratio"] = mf / max(hlo_global, 1)
+        recs.append(r)
+    return recs
+
+
+def markdown_table(recs):
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL_FLOPS | useful | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in recs:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED: {r['error'][:40]} "
+                         "| | | | | | |")
+            continue
+        t = r["roofline_s"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']:.4f} | "
+            f"{t['memory']:.4f} | {t['collective']:.4f} | {r['dominant']} | "
+            f"{r['model_flops']:.2e} | {r['useful_ratio']:.2f} | "
+            f"{r['memory_analysis']['temp_size_in_bytes'] / 2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def csv_rows(recs):
+    rows = []
+    for r in recs:
+        if "error" in r:
+            continue
+        t = r["roofline_s"]
+        dom = r["dominant"]
+        rows.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                     round(t[dom], 5), f"dominant={dom}"))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load_records("sp")
+    print(markdown_table(recs))

@@ -1,0 +1,54 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows. ``--quick`` trims trace sizes for
+smoke use; ``--section <name>`` runs one section.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import kernels_bench, paper, roofline
+
+    sections = {
+        "timescale": paper.bench_timescale_validation,          # Sec. 6
+        "latency_profile": paper.bench_latency_profile,         # Fig. 8
+        "rowclone_noflush": lambda: paper.bench_rowclone("noflush"),   # Fig. 10
+        "rowclone_clflush": lambda: paper.bench_rowclone("clflush"),   # Fig. 11
+        "trcd_profile": paper.bench_trcd_profile,               # Fig. 12
+        "trcd_endtoend": (lambda: paper.bench_trcd_endtoend(8)) if args.quick
+        else paper.bench_trcd_endtoend,                          # Fig. 13
+        "sim_speed": paper.bench_sim_speed,                     # Fig. 14
+        "lm_traces": paper.bench_lm_traces,                     # framework tie-in
+        "kernels": kernels_bench.bench_kernels,
+        "roofline": lambda: roofline.csv_rows(roofline.load_records("sp")),
+    }
+    if args.section:
+        sections = {args.section: sections[args.section]}
+
+    print("name,value,derived")
+    failures = 0
+    for name, fn in sections.items():
+        t0 = time.perf_counter()
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row))
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}:{e}")
+        print(f"_section_{name}_seconds,{time.perf_counter()-t0:.1f},wall",
+              flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

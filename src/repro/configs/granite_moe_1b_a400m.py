@@ -1,0 +1,12 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]"""
+from repro.configs import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8,
+    d_ff=512, vocab_size=49155,
+    act="swiglu", rope_theta=1e4, tie_embeddings=True,
+    moe=MoEConfig(n_experts=32, top_k=8, d_ff=512, every=1),
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

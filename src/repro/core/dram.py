@@ -1,0 +1,124 @@
+"""DRAM geometry + timing model (DDR4-flavored), all times in DRAM ticks.
+
+One tick = one DRAM command-clock cycle (0.833 ns at DDR4-2400). Using
+int32 ticks keeps the whole emulator exact (no float drift) — 2^31 ticks
+= 1.8 s of DRAM time, far beyond any emulated workload here.
+
+``BankState`` is the vectorized per-bank timing state machine that the
+command-batch executor (our DRAM-Bender analogue) advances. The paper's
+SMC prepares command batches; :func:`service_request` computes the exact
+DRAM time to serve one request given the current bank state, honoring
+tRCD/tRP/tRAS/tCL/tWR/tBL + refresh, with technique hooks (reduced tRCD,
+RowClone sequences).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+TCK_NS = 0.833  # DDR4-2400
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    tRCD: int = 17          # 13.5 ns nominal (paper's module, Micron EDY4016A)
+    tRCD_reduced: int = 11  # 9.0 ns — strong-row access (Solar-DRAM style)
+    tCL: int = 17
+    tRP: int = 17
+    tRAS: int = 39
+    tWR: int = 18
+    tBL: int = 4            # burst 8, DDR
+    tRTP: int = 9
+    tRFC: int = 420         # 350 ns
+    tREFI: int = 9360       # 7.8 us
+    tRC_CLONE: int = 90     # ACT->PRE->ACT RowClone FPM sequence (~75 ns)
+
+    def as_array(self):
+        return jnp.array([self.tRCD, self.tRCD_reduced, self.tCL, self.tRP,
+                          self.tRAS, self.tWR, self.tBL, self.tRTP,
+                          self.tRFC, self.tREFI, self.tRC_CLONE], jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    n_banks: int = 16       # 4 bankgroups x 4 banks
+    n_rows: int = 32768     # per bank (paper cfg: 32K rows)
+    row_bytes: int = 8192   # 8 KiB row
+    line_bytes: int = 64
+    subarray_rows: int = 512
+
+    @property
+    def lines_per_row(self) -> int:
+        return self.row_bytes // self.line_bytes
+
+
+# request kinds in traces
+READ, WRITE, RC_COPY, RC_INIT, NOP = 0, 1, 2, 3, 4
+
+
+def init_bank_state(geo: Geometry):
+    return {
+        "open_row": jnp.full((geo.n_banks,), -1, jnp.int32),
+        "ready": jnp.zeros((geo.n_banks,), jnp.int32),     # tick when bank usable
+        "act_at": jnp.zeros((geo.n_banks,), jnp.int32),    # last ACT tick (tRAS)
+        "bus_busy": jnp.zeros((), jnp.int32),              # channel data bus
+        "refs_done": jnp.zeros((), jnp.int32),
+    }
+
+
+def service_request(bank_state, t: Timing, kind, bank, row, now, trcd_eff):
+    """Serve one request starting no earlier than tick ``now``.
+
+    Banks pipeline: a request occupies its *bank* for the row-cycle work
+    and the shared channel *bus* for tBL around the data burst, so
+    streaming traffic across banks reaches burst-rate bandwidth — the
+    behavior that separates a real memory system from a serialized one.
+
+    trcd_eff: tRCD ticks to use for the activate (technique hook).
+    Returns (new_bank_state, t_done, row_hit). Pure function of arrays.
+    """
+    open_row = bank_state["open_row"][bank]
+    ready = bank_state["ready"][bank]
+    act_at = bank_state["act_at"][bank]
+
+    # refresh: catch up on REF debt before serving (simplified all-bank REF)
+    refs_due = now // t.tREFI - bank_state["refs_done"]
+    refs_due = jnp.maximum(refs_due, 0)
+    ref_pen = refs_due * t.tRFC
+
+    start = jnp.maximum(now, ready) + ref_pen
+    is_hit = (open_row == row) & (kind != RC_COPY) & (kind != RC_INIT)
+    is_closed = open_row < 0
+
+    # PRE (row conflict) must respect tRAS from last ACT
+    pre_at = jnp.maximum(start, act_at + t.tRAS)
+    t_after_pre = pre_at + t.tRP
+    act_start = jnp.where(is_closed, start, t_after_pre)
+
+    # column access: CAS may issue once the row is open; data needs the bus
+    t_act_done = act_start + trcd_eff
+    col_start = jnp.where(is_hit, start, t_act_done)
+    data_start = jnp.maximum(col_start + t.tCL, bank_state["bus_busy"])
+    data_done = data_start + t.tBL
+
+    # RowClone: ACT(src)-PRE-ACT(dst) fused sequence, no bus traffic
+    rc_done = act_start + t.tRC_CLONE
+
+    is_rc = (kind == RC_COPY) | (kind == RC_INIT)
+    t_done = jnp.where(is_rc, rc_done, data_done)
+
+    # bank stays busy past the burst for writes (tWR write recovery)
+    bank_next = jnp.where(is_rc, rc_done,
+                          jnp.where(kind == WRITE, data_done + t.tWR,
+                                    data_done))
+    new_act_at = jnp.where(is_hit, act_at, act_start)
+
+    bs = dict(bank_state)
+    bs["open_row"] = bank_state["open_row"].at[bank].set(row)
+    bs["ready"] = bank_state["ready"].at[bank].set(bank_next)
+    bs["act_at"] = bank_state["act_at"].at[bank].set(new_act_at)
+    bs["bus_busy"] = jnp.where(is_rc, bank_state["bus_busy"], data_done)
+    bs["refs_done"] = bank_state["refs_done"] + refs_due
+    return bs, t_done, is_hit

@@ -1,0 +1,270 @@
+"""The EasyDRAM engine: trace-driven, multi-domain, time-scaled emulation.
+
+One fused ``lax.scan`` implements the whole request lifetime of Fig. 6:
+processor issue (bounded-window in-order front end) -> hardware request
+buffer -> SMC critical mode (visibility cutoff on the time-scaling
+counter) -> scheduling decision (FR-FCFS/FCFS) -> DRAM-Bender-style
+command-batch execution on the bank state machine -> response tagged with
+its consume cycle -> counter advance.
+
+Each scan step performs one SMC scheduling slot (serve one visible
+request, or an idle hop to the next arrival), so ``2N + 4`` slots always
+complete an N-request trace. All arithmetic is exact int32 (DRAM ticks /
+processor cycles, fixed-point 1/4096 conversion); results are
+bit-reproducible, which is what lets the Sec. 6 validation assert exact
+invariance of time-scaled results to FPGA-side clocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dram
+from repro.core.bloom import bloom_probe_jnp
+from repro.core.dram import NOP
+from repro.core.timescale import SystemConfig
+
+BIG = jnp.int32(2 ** 30)
+FP = 4096  # fixed-point denominator for tick<->cycle conversion
+
+
+def _mul_div(a, num, den):
+    """Exact a * num // den without int32 overflow (num, den ~ 1e3..1e4)."""
+    q = a // den
+    r = a - q * den
+    return q * num + (r * num) // den
+
+
+@dataclasses.dataclass
+class Trace:
+    """Padded request trace. kind==NOP entries are ignored."""
+    kind: np.ndarray    # int32 [N]
+    bank: np.ndarray    # int32 [N]
+    row: np.ndarray     # int32 [N]
+    delta: np.ndarray   # int32 [N] proc cycles of compute before this request
+    dep: np.ndarray     # int32 [N] 0 = window-only; d>0 = depends on resp[i-d]
+
+    @property
+    def n(self):
+        return int(self.kind.shape[0])
+
+    @staticmethod
+    def of(kind, bank, row, delta, dep=None):
+        kind = np.asarray(kind, np.int32)
+        z = np.zeros_like(kind)
+        return Trace(kind=kind, bank=np.asarray(bank, np.int32),
+                     row=np.asarray(row, np.int32),
+                     delta=np.asarray(delta, np.int32),
+                     dep=z if dep is None else np.asarray(dep, np.int32))
+
+    def arrays(self):
+        return (jnp.asarray(self.kind), jnp.asarray(self.bank),
+                jnp.asarray(self.row), jnp.asarray(self.delta),
+                jnp.asarray(self.dep))
+
+
+def _issue_frontier(t_issue, t_resp, queue, kindj, delta, dep, ptr, W, upto=4):
+    """Advance the in-order issue pointer by up to ``upto`` requests,
+    pushing them into free hardware-queue slots. ``queue`` holds request
+    indices (-1 = free); occupancy can never exceed the window W because
+    issue is in-order with W outstanding."""
+    N = t_issue.shape[0]
+    for _ in range(upto):
+        j = ptr
+        jc = jnp.clip(j, 0, N - 1)
+        prev_issue = jnp.where(j > 0, t_issue[jnp.clip(j - 1, 0, N - 1)], 0)
+        base = prev_issue + delta[jc]
+        wj = j - W
+        win_known = (wj < 0) | (t_resp[jnp.clip(wj, 0, N - 1)] < BIG)
+        win_t = jnp.where(wj >= 0, t_resp[jnp.clip(wj, 0, N - 1)] + 1, 0)
+        dj = j - dep[jc]
+        dep_on = dep[jc] > 0
+        dep_known = (~dep_on) | (dj < 0) | (t_resp[jnp.clip(dj, 0, N - 1)] < BIG)
+        dep_t = jnp.where(dep_on & (dj >= 0), t_resp[jnp.clip(dj, 0, N - 1)] + 1, 0)
+        free = queue < 0
+        slot = jnp.argmax(free).astype(jnp.int32)
+        is_nop = kindj[jc] == 4  # NOP padding: resolve instantly, skip queue
+        can = (j < N) & win_known & dep_known & (jnp.any(free) | is_nop)
+        t_new = jnp.maximum(jnp.maximum(base, win_t), dep_t)
+        t_issue = jnp.where(can, t_issue.at[jc].set(t_new), t_issue)
+        t_resp = jnp.where(can & is_nop, t_resp.at[jc].set(t_new), t_resp)
+        queue = jnp.where(can & ~is_nop, queue.at[slot].set(jc), queue)
+        ptr = jnp.where(can, ptr + 1, ptr)
+    return t_issue, t_resp, queue, ptr
+
+
+@partial(jax.jit, static_argnames=("sys", "mode", "bloom_k", "bloom_m"))
+def _run(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
+         bloom_words, bloom_k: int, bloom_m: int):
+    N = kind.shape[0]
+    t = sys.timing
+    geo = sys.geometry
+    W = sys.window
+    frfcfs = sys.scheduler == "frfcfs"
+    use_bloom = bloom_words is not None
+
+    # proc cycles per DRAM tick, fixed-point /FP
+    scale_num = jnp.int32(round((sys.proc_per_tick_fpga if mode == "nots"
+                                 else sys.proc_per_tick_emu) * FP))
+    # per-decision MC occupancy (decision *rate*) and per-response latency:
+    # ts models the emulated HW MC; nots free-runs against the real SMC
+    mc_issue = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots"
+                         else sys.hwmc_issue_proc)
+    mc_lat = jnp.int32(0 if mode == "nots" else sys.hwmc_latency_proc)
+    # a slow SMC batches up whatever arrived while it was busy (nots only)
+    vis_slack = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots" else 0)
+
+    Q = max(W, 2)
+    state = {
+        "bank": dram.init_bank_state(geo),
+        "t_issue": jnp.zeros((N,), jnp.int32),
+        "t_resp": jnp.full((N,), BIG, jnp.int32),
+        "queue": jnp.full((Q,), -1, jnp.int32),  # hardware request buffer
+        "ptr": jnp.int32(0),
+        "mc_release": jnp.int32(0),     # time-scaling MC counter (proc cycles)
+        "dram_now": jnp.int32(0),       # DRAM real-time frontier (ticks)
+        "hits": jnp.int32(0),
+        "served_n": jnp.int32(0),
+        "smc_fpga_cycles": jnp.int32(0),
+    }
+
+    kindj, bankj, rowj, deltaj, depj = kind, bank, row, delta, dep
+
+    def slot(state, _):
+        t_issue, t_resp = state["t_issue"], state["t_resp"]
+        t_issue, t_resp, queue, ptr = _issue_frontier(
+            t_issue, t_resp, state["queue"], kindj, deltaj, depj,
+            state["ptr"], W)
+
+        # gather queued requests (O(Q), not O(N))
+        qvalid = queue >= 0
+        qidx = jnp.clip(queue, 0, N - 1)
+        q_t = jnp.where(qvalid, t_issue[qidx], BIG)
+        q_bank = bankj[qidx]
+        q_row = rowj[qidx]
+
+        cutoff = state["mc_release"] + vis_slack
+        visible = qvalid & (q_t <= cutoff)
+        do = jnp.any(visible)
+
+        # ---- scheduling policy (int32-safe two-level argmin) ----
+        open_rows = state["bank"]["open_row"]
+        hit_now = open_rows[q_bank] == q_row
+        key_all = jnp.where(visible, q_t, BIG)
+        key_hit = jnp.where(visible & hit_now, q_t, BIG)
+        slot_hit = jnp.argmin(key_hit).astype(jnp.int32)
+        slot_old = jnp.argmin(key_all).astype(jnp.int32)
+        use_hit = frfcfs & jnp.any(visible & hit_now)
+        qslot = jnp.where(use_hit, slot_hit, slot_old)
+        pick = qidx[qslot]
+
+        # ---- DRAM service (command-batch executor) ----
+        # decision happens when the MC is free AND the request has arrived
+        decision_t = jnp.maximum(t_issue[pick], state["mc_release"])
+        dram_req_t = jnp.maximum(state["dram_now"],
+                                 _mul_div(decision_t, FP, jnp.maximum(scale_num, 1)))
+        trcd_eff = jnp.int32(t.tRCD)
+        if use_bloom:
+            gid = (bankj[pick] * geo.n_rows + rowj[pick]).astype(jnp.uint32)
+            weakp = bloom_probe_jnp(bloom_words, bloom_m, bloom_k, gid[None])[0]
+            trcd_eff = jnp.where(weakp, jnp.int32(t.tRCD), jnp.int32(t.tRCD_reduced))
+        nbs, t_done, hit = dram.service_request(
+            state["bank"], t, kindj[pick], bankj[pick], rowj[pick],
+            dram_req_t, trcd_eff)
+
+        # ---- time scaling: response consume-tag in modeled proc cycles.
+        # t_done is absolute DRAM time; decisions pipeline at mc_issue rate
+        # while each response additionally carries the MC pipeline latency.
+        resp_t = _mul_div(t_done, scale_num, FP) + mc_lat
+        resp_t = jnp.maximum(resp_t, decision_t + mc_issue)
+
+        state = dict(state)
+        state["bank"] = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(do, b, a), state["bank"], nbs)
+        state["t_resp"] = jnp.where(do, t_resp.at[pick].set(resp_t), t_resp)
+        queue = jnp.where(do, queue.at[qslot].set(-1), queue)
+        state["dram_now"] = jnp.where(do, jnp.maximum(state["dram_now"], dram_req_t),
+                                      state["dram_now"])
+        state["hits"] = state["hits"] + jnp.where(do & hit, 1, 0)
+        state["served_n"] = state["served_n"] + jnp.where(do, 1, 0)
+        state["smc_fpga_cycles"] = state["smc_fpga_cycles"] + jnp.where(
+            do, sys.smc_cycles_per_decision + sys.smc_transfer_cycles, 0)
+        # MC busy until the next decision slot; idle hop to the next arrival
+        # when nothing is visible
+        nxt = jnp.min(q_t)
+        state["mc_release"] = jnp.where(
+            do, jnp.maximum(state["mc_release"], decision_t + mc_issue),
+            jnp.maximum(state["mc_release"], jnp.minimum(nxt, BIG - 1)))
+        state["t_issue"], state["queue"], state["ptr"] = t_issue, queue, ptr
+        return state, None
+
+    state, _ = jax.lax.scan(slot, state, None, length=2 * N + 4)
+    # trailing frontier pass so post-memory compute counts
+    t_issue, _, _, ptr = _issue_frontier(
+        state["t_issue"], state["t_resp"], state["queue"],
+        kindj, deltaj, depj, state["ptr"], W, upto=8)
+    valid = kindj != NOP
+    served_mask = state["t_resp"] < BIG
+    last_resp = jnp.max(jnp.where(valid & served_mask, state["t_resp"], 0))
+    last_issue = jnp.max(jnp.where(valid, t_issue, 0))
+    return {
+        "exec_cycles": jnp.maximum(last_resp, last_issue),
+        "row_hits": state["hits"],
+        "served": state["served_n"],
+        "dram_ticks": state["dram_now"],
+        "smc_fpga_cycles": state["smc_fpga_cycles"],
+        "t_resp": state["t_resp"],
+        "t_issue": t_issue,
+    }
+
+
+def pad_trace(tr: Trace, n: int) -> Trace:
+    """Pad with NOPs to length n (keeps jit caches warm across sizes)."""
+    k = n - tr.n
+    assert k >= 0
+    z = np.zeros(k, np.int32)
+    return Trace(kind=np.concatenate([tr.kind, z + 4]),
+                 bank=np.concatenate([tr.bank, z]),
+                 row=np.concatenate([tr.row, z]),
+                 delta=np.concatenate([tr.delta, z]),
+                 dep=np.concatenate([tr.dep, z]))
+
+
+def _bucket(n: int) -> int:
+    b = 256
+    while b < n:
+        b *= 2
+    return b
+
+
+def run(trace: Trace, sys: SystemConfig, mode: str = "ts",
+        bloom: Optional[tuple] = None) -> dict:
+    """mode: 'ts' | 'nots' | 'reference'. bloom: (words_u32, k, m_bits).
+
+    'reference' is the Sec. 6 RTL reference system: a hardware memory
+    controller at the modeled clock. Its math must coincide with 'ts' —
+    that coincidence (validated in tests/benchmarks) IS the paper's
+    time-scaling accuracy claim.
+    """
+    assert mode in ("ts", "nots", "reference")
+    trace = pad_trace(trace, _bucket(trace.n))
+    words, k, m = (None, 0, 1)
+    if bloom is not None:
+        words, k, m = jnp.asarray(bloom[0]), bloom[1], bloom[2]
+    out = _run(*trace.arrays(), sys=sys,
+               mode=("ts" if mode == "reference" else mode),
+               bloom_words=words, bloom_k=k, bloom_m=m)
+    out = {kk: np.asarray(v) for kk, v in out.items()}
+    out["exec_seconds"] = sys.cycles_to_seconds(out["exec_cycles"], mode)
+    out["mode"] = mode
+    n_req = int((trace.kind != NOP).sum())
+    out["n_requests"] = n_req
+    lat = out["t_resp"] - out["t_issue"]
+    ok = (trace.kind != NOP) & (out["t_resp"] < int(BIG))
+    out["avg_load_latency_cycles"] = float(lat[ok].mean()) if ok.any() else 0.0
+    return out

@@ -1,0 +1,115 @@
+"""DRAM techniques as software-memory-controller extensions (Secs. 7-8).
+
+Each technique is ~100 lines of plain Python/JAX over the engine — the
+paper's accessibility claim, reproduced. ``RowClone`` handles the four
+allocation constraints (alignment / granularity / subarray mapping /
+coherence) with profiling-driven fallback; ``TRCDReduction`` runs the
+two-stage characterize -> Bloom-filter flow and hands the filter to the
+engine, which consults it on every row activation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import emulator, traces
+from repro.core.bloom import BloomFilter
+from repro.core.dram import Geometry
+from repro.core.profiling import DeviceModel
+from repro.core.timescale import SystemConfig
+
+
+@dataclasses.dataclass
+class RowCloneResult:
+    mode: str
+    setting: str
+    n_bytes: int
+    exec_cycles: int
+    exec_seconds: float
+    fallback_rows: int
+    speedup_vs_cpu: float = 0.0
+
+
+class RowClone:
+    """In-DRAM bulk copy/initialization (Sec. 7)."""
+
+    def __init__(self, sys: SystemConfig, device: Optional[DeviceModel] = None):
+        self.sys = sys
+        self.geo = sys.geometry
+        self.device = device or DeviceModel(self.geo)
+
+    def evaluate(self, n_bytes: int, workload: str = "copy",
+                 setting: str = "noflush", mode_ts: str = "ts",
+                 cpu_line_delta: int = None):
+        """Returns {'cpu': RowCloneResult, 'rowclone': RowCloneResult}.
+
+        cpu_line_delta models the per-line instruction cost of the
+        *modeled* CPU's copy loop (a 3-wide OoO core with 64B NEON moves
+        retires far fewer cycles/line than a 50 MHz single-issue rv64)."""
+        gen = traces.copy_workload if workload == "copy" else traces.init_workload
+        kw = {} if cpu_line_delta is None else {"cpu_line_delta": cpu_line_delta}
+        out = {}
+        for mode in ("cpu", "rowclone"):
+            tr, meta = gen(n_bytes, self.geo, mode=mode, device=self.device,
+                           setting=setting, **kw)
+            r = emulator.run(tr, self.sys, mode=mode_ts)
+            out[mode] = RowCloneResult(
+                mode=mode, setting=setting, n_bytes=n_bytes,
+                exec_cycles=int(r["exec_cycles"]),
+                exec_seconds=r["exec_seconds"],
+                fallback_rows=meta["fallback_rows"])
+        cpu = out["cpu"].exec_cycles
+        rc = out["rowclone"].exec_cycles
+        out["rowclone"].speedup_vs_cpu = cpu / max(rc, 1)
+        return out
+
+
+class TRCDReduction:
+    """Reduced-tRCD access via characterization + Bloom filter (Sec. 8)."""
+
+    def __init__(self, sys: SystemConfig, device: Optional[DeviceModel] = None,
+                 m_bits: int = 1 << 20, k: int = 4):
+        self.sys = sys
+        self.geo = sys.geometry
+        self.device = device or DeviceModel(self.geo)
+        self.m_bits = m_bits
+        self.k = k
+        self._bloom: Optional[BloomFilter] = None
+
+    def characterize(self) -> BloomFilter:
+        """Stage 1+2: profile rows (device model = the profiling requests'
+        results), key the Bloom filter with weak rows."""
+        weak = self.device.weak_rows()
+        self._bloom = BloomFilter.build(weak, m_bits=self.m_bits, k=self.k)
+        return self._bloom
+
+    @property
+    def bloom_tuple(self):
+        if self._bloom is None:
+            self.characterize()
+        b = self._bloom
+        return (b.bits, b.k, b.m_bits)
+
+    def safety_check(self, n=100000, seed=1):
+        """A false positive must map weak->nominal only: verify no weak row
+        ever probes negative (zero false negatives by construction)."""
+        weak = self.device.weak_rows()
+        assert self._bloom is not None
+        miss = (~self._bloom.contains(weak)).sum()
+        rng = np.random.RandomState(seed)
+        probe = rng.randint(0, self.geo.n_banks * self.geo.n_rows, n)
+        truth = self.device.weak.reshape(-1)[probe]
+        fpr = self._bloom.false_positive_rate(probe, truth)
+        return {"false_negatives": int(miss), "false_positive_rate": float(fpr)}
+
+    def evaluate_trace(self, trace, mode_ts: str = "ts"):
+        """Run a workload with and without reduced-tRCD scheduling."""
+        base = emulator.run(trace, self.sys, mode=mode_ts)
+        red = emulator.run(trace, self.sys, mode=mode_ts, bloom=self.bloom_tuple)
+        return {
+            "base_cycles": int(base["exec_cycles"]),
+            "reduced_cycles": int(red["exec_cycles"]),
+            "speedup": int(base["exec_cycles"]) / max(int(red["exec_cycles"]), 1),
+        }

@@ -1,0 +1,92 @@
+"""Time scaling: emulation domains, counters, and system configuration.
+
+The paper's mechanism (Sec. 4.3): the modeled system is split into
+emulation domains — processor(s), software memory controller (SMC), DRAM
+— each with a cycle counter. The engine clock-gates the processor domain
+while the SMC is in *critical mode* and releases it by advancing the MC
+counter with the *emulated-system* service time (not the FPGA-real time
+the slow SMC actually took). Responses carry a consume-tag (processor
+cycle) so a processor never observes data earlier than the modeled
+system would deliver it.
+
+``SystemConfig`` carries both the modeled system's clocks and the FPGA
+platform's clocks, so one engine expresses all three evaluation modes:
+
+* ``ts``        — time scaling ON: emulated time uses f_proc_emu + the
+                  modeled HW-MC latency; SMC slowness is invisible.
+* ``nots``      — PiDRAM-style: the processor free-runs at f_proc_fpga in
+                  FPGA-real time, so SMC slowness and the clock-ratio
+                  mismatch leak into results (the inaccuracy the paper
+                  quantifies at ~20x).
+* ``reference`` — the Sec. 6 RTL reference: a hardware MC at the modeled
+                  clock; used to validate ts to <0.1%.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.dram import TCK_NS, Geometry, Timing
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    # modeled (emulated) system — defaults mirror the Jetson Nano / A57 target
+    f_proc_emu_ghz: float = 1.43
+    hwmc_latency_ns: float = 20.0      # modeled hardware-MC pipeline latency
+    hwmc_issue_ns: float = 2.0         # modeled HW-MC decision (issue) rate
+    # FPGA platform
+    f_proc_fpga_mhz: float = 50.0
+    f_mc_fpga_mhz: float = 100.0
+    smc_cycles_per_decision: int = 400  # SMC instructions per scheduling decision
+    smc_transfer_cycles: int = 120      # request/command buffer transfer overhead
+    # processor model
+    window: int = 4                     # max outstanding requests (MLP)
+    # DRAM
+    timing: Timing = dataclasses.field(default_factory=Timing)
+    geometry: Geometry = dataclasses.field(default_factory=Geometry)
+    scheduler: str = "frfcfs"           # frfcfs | fcfs
+
+    # ---- derived conversion helpers (proc cycles per DRAM tick etc.) ----
+    @property
+    def proc_per_tick_emu(self) -> float:
+        return self.f_proc_emu_ghz * TCK_NS
+
+    @property
+    def proc_per_tick_fpga(self) -> float:
+        return self.f_proc_fpga_mhz * 1e-3 * TCK_NS
+
+    @property
+    def hwmc_latency_proc(self) -> int:
+        return int(round(self.hwmc_latency_ns * self.f_proc_emu_ghz))
+
+    @property
+    def hwmc_issue_proc(self) -> int:
+        return max(int(round(self.hwmc_issue_ns * self.f_proc_emu_ghz)), 1)
+
+    @property
+    def smc_latency_fpga_proc(self) -> int:
+        """SMC decision latency as seen by a free-running FPGA processor."""
+        fpga_ns = (self.smc_cycles_per_decision + self.smc_transfer_cycles) \
+            / (self.f_mc_fpga_mhz * 1e-3)
+        return int(round(fpga_ns * self.f_proc_fpga_mhz * 1e-3))
+
+    def dram_ticks_to_proc(self, ticks, mode: str):
+        if mode == "nots":
+            return ticks * self.proc_per_tick_fpga
+        return ticks * self.proc_per_tick_emu
+
+    def cycles_to_seconds(self, cycles, mode: str) -> float:
+        hz = (self.f_proc_fpga_mhz * 1e6) if mode == "nots" \
+            else (self.f_proc_emu_ghz * 1e9)
+        return float(cycles) / hz
+
+
+JETSON_NANO = SystemConfig()
+
+# PiDRAM-style platform: 50 MHz in-order core + RTL (fast) memory
+# controller, no time scaling -> the clock-ratio skew the paper measures
+PIDRAM_LIKE = SystemConfig(f_proc_fpga_mhz=50.0, window=1,
+                           smc_cycles_per_decision=0, smc_transfer_cycles=0)
+
+VALIDATION_1GHZ = SystemConfig(f_proc_emu_ghz=1.0, f_proc_fpga_mhz=100.0,
+                               f_mc_fpga_mhz=100.0)

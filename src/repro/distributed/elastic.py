@@ -1,0 +1,37 @@
+"""Elastic re-meshing: reshard a training state onto a new mesh.
+
+On node loss (or growth) the runtime rebuilds the mesh from the healthy
+device set and moves the ZeRO-1-sharded state onto it. Sharding specs
+re-resolve under the new axis sizes (the divisibility fallbacks in
+``sharding.rules`` absorb shrunken axes); data is moved with
+``jax.device_put`` which reshards across the old/new layouts.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding.rules import Rules
+from repro.train import optimizer as opt
+
+
+def remesh_state(state, model, new_mesh: Mesh):
+    """Reshard an AdamWState onto new_mesh; returns (state, new_rules)."""
+    rules = Rules(new_mesh)
+    specs = opt.state_pspecs(model.defs, rules)
+
+    def move(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+
+    new_state = jax.tree_util.tree_map(move, state, specs)
+    return new_state, rules
+
+
+def healthy_mesh(n_devices: int, model_parallel: int):
+    """Build the largest (data, model) mesh from surviving devices."""
+    devs = jax.devices()[:n_devices]
+    model_parallel = min(model_parallel, len(devs))
+    data = len(devs) // model_parallel
+    return Mesh(
+        __import__("numpy").array(devs[:data * model_parallel])
+        .reshape(data, model_parallel), ("data", "model"))

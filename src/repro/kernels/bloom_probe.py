@@ -1,0 +1,57 @@
+"""Bloom-filter probe as a Pallas kernel (Sec. 8.2's per-ACT hot path).
+
+The bit array (2^20 bits = 128 KiB of u32 words) pins in VMEM; query
+blocks of 1024 keys stream through, each hashed k times with the same
+mix as ``core.bloom``. Gathers over the VMEM-resident word array are
+cheap on TPU; output is one int8 per key (1 = possibly weak -> nominal
+tRCD, 0 = definitely strong -> reduced tRCD).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_MULS = (0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F, 0x165667B1,
+         0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2D)
+
+
+def _kernel(words_ref, keys_ref, out_ref, *, k, m_bits):
+    keys = keys_ref[:].astype(jnp.uint32)
+    words = words_ref[:]
+    hit = jnp.ones(keys.shape, jnp.bool_)
+    for i in range(k):
+        x = keys
+        x = x ^ (x >> 16)
+        x = x * jnp.uint32(_MULS[i])
+        x = x ^ (x >> 13)
+        x = x * jnp.uint32(0x2B2AE3D5)
+        x = x ^ (x >> 16)
+        idx = x & jnp.uint32(m_bits - 1)
+        w = words[(idx >> 5).astype(jnp.int32)]
+        bit = (w >> (idx & 31)) & jnp.uint32(1)
+        hit = hit & (bit == 1)
+    out_ref[:] = hit.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "m_bits", "block", "interpret"))
+def bloom_probe(words, keys, k: int, m_bits: int, block: int = 1024,
+                interpret=False):
+    """words: [m_bits//32] uint32; keys: [N] uint32 -> int8 [N]."""
+    N = keys.shape[0]
+    pad = (-N) % block
+    keys_p = jnp.pad(keys, (0, pad))
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k, m_bits=m_bits),
+        grid=(keys_p.shape[0] // block,),
+        in_specs=[
+            pl.BlockSpec((words.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(keys_p.shape, jnp.int8),
+        interpret=interpret,
+    )(words, keys_p)
+    return out[:N]

@@ -1,0 +1,75 @@
+"""Flash attention (GQA, causal) as a Pallas TPU kernel.
+
+Tiling: grid = (B * KV * G, Sq / BQ). Each program holds one q block
+[BQ, hd] plus its kv-head's full K/V rows in VMEM and streams kv chunks
+of BK with the online-softmax recurrence (fp32 m/l/acc). BQ=BK=128 keeps
+the MXU fed (hd is 64/128/256 for the assigned archs). K/V VMEM residency
+bounds Sk <= ~8k at hd=128 bf16; the ops wrapper falls back to the
+chunked-XLA path beyond that.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, bq, bk, q_start_blocks):
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :].astype(jnp.float32) * scale          # [BQ, hd]
+    Sk = k_ref.shape[1]
+    nk = Sk // bk
+
+    m = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq, 1), jnp.float32)
+    acc = jnp.zeros((bq, q.shape[-1]), jnp.float32)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)   # [BK, hd]
+        v = v_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        s = q @ k.T                                              # [BQ, BK]
+        if causal:
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v
+        return m_new, l, acc
+
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m, l, acc))
+    o_ref[0, :, :] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_bhsd(q, k, v, causal=True, bq=128, bk=128, interpret=False):
+    """q: [BHq, Sq, hd]; k, v: [BHkv, Sk, hd]; BHq = BHkv * G."""
+    BH, Sq, hd = q.shape
+    BK = k.shape[0]
+    G = BH // BK
+    bq = min(bq, Sq)
+    bk = min(bk, k.shape[1])
+    assert Sq % bq == 0 and k.shape[1] % bk == 0
+    scale = hd ** -0.5
+    grid = (BH, Sq // bq)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+                          q_start_blocks=0),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k.shape[1], hd), lambda i, j, G=G: (i // G, 0, 0)),
+            pl.BlockSpec((1, v.shape[1], hd), lambda i, j, G=G: (i // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

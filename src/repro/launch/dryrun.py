@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_DRYRUN_XLA", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the full-size model from its config, resolves
+shardings, lowers the real step function (train_step incl. optimizer for
+train shapes; prefill/decode for serve shapes) against ShapeDtypeStruct
+inputs, compiles it, and records memory_analysis / cost_analysis /
+per-device collective bytes into a JSON artifact under
+``artifacts/dryrun/``. No arrays are ever allocated.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4_9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, all_configs, applicable_shapes, get_config, get_shape
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import model_zoo
+from repro.sharding import rules as rules_mod
+from repro.train import optimizer as opt
+from repro.train.trainer import make_train_step
+from repro.utils import hlo as hlo_util
+from repro.utils import hlo_cost
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def _sharded(mesh, spec_tree, sds_tree):
+    return jax.tree_util.tree_map(
+        lambda sds, spec: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                               sharding=NamedSharding(mesh, spec)),
+        sds_tree, spec_tree)
+
+
+# microbatch counts chosen so train cells fit 16 GiB/chip (also keeps the
+# accumulation scan >= 16 trips, which XLA:CPU would otherwise unroll)
+MICROBATCHES = {
+    "jamba_v0_1_52b": 16, "llava_next_34b": 16, "qwen3_moe_30b_a3b": 16,
+    "glm4_9b": 4, "qwen3_8b": 4, "gemma_7b": 4, "rwkv6_3b": 4,
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, remat=True,
+               prefs=None, extra_tag="", microbatches=None, kv_dtype=None,
+               grad_compress=False, cfg_overrides=None, moe_overrides=None):
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    if moe_overrides and cfg.moe:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, **moe_overrides))
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_mod.Rules(mesh, prefs=prefs)
+    cdt = {"int8": jnp.int8, "bf16": jnp.bfloat16, None: jnp.bfloat16}[kv_dtype]
+    model = model_zoo.build(cfg, s_max=shape.seq_len, remat=remat,
+                            cache_dtype=cdt)
+    t0 = time.perf_counter()
+    rules_mod.set_rules(rules)
+    try:
+        ins = model.input_specs(shape)
+        in_pspecs = model.input_pspecs(shape, rules)
+        if shape.kind == "train":
+            k = microbatches if microbatches is not None else MICROBATCHES.get(arch, 1)
+            gc = "int8_wire" if grad_compress else None
+            step = make_train_step(model, opt.AdamWConfig(), rules,
+                                   num_microbatches=k, grad_compressor=gc)
+            state_sds = opt.abstract_state(model.defs)
+            state_ps = opt.state_pspecs(model.defs, rules)
+            args_sds = (_sharded(mesh, state_ps, state_sds),
+                        _sharded(mesh, in_pspecs, ins))
+            fn = jax.jit(step, donate_argnums=(0,))
+        elif shape.kind == "prefill":
+            # serve params are 2D-sharded (TP x data): weights stream once
+            # per token, so gather-on-use beats replicated residency
+            pspecs = opt.zero1_pspecs(model.defs, rules)
+            params_sds = model.abstract_params(jnp.bfloat16)
+            args_sds = (_sharded(mesh, pspecs, params_sds),
+                        _sharded(mesh, in_pspecs, ins))
+            fn = jax.jit(model.prefill_fn)
+        else:  # decode
+            pspecs = opt.zero1_pspecs(model.defs, rules)
+            params_sds = model.abstract_params(jnp.bfloat16)
+            args_sds = (_sharded(mesh, pspecs, params_sds),
+                        _sharded(mesh, in_pspecs["cache"], ins["cache"]),
+                        _sharded(mesh, in_pspecs["token"], ins["token"]),
+                        _sharded(mesh, P(), ins["pos"]))
+            fn = jax.jit(model.decode_fn, donate_argnums=(1,))
+        with mesh:
+            lowered = fn.lower(*args_sds)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+    finally:
+        rules_mod.set_rules(None)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = hlo_util.collective_bytes(txt)
+    # loop-aware accounting: XLA cost_analysis counts while bodies once;
+    # hlo_cost multiplies by proven trip counts (see utils/hlo_cost.py)
+    adj = hlo_cost.analyze(txt)
+    chips = mesh.devices.size
+
+    mem_rec = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        mem_rec[f] = int(getattr(mem, f, 0) or 0)
+    per_dev_flops = float(adj["flops"])
+    per_dev_bytes = float(adj["bytes"])
+    per_dev_coll = float(adj["collective_bytes"])
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "chips": chips, "kind": shape.kind,
+        "n_params": model.n_params(),
+        "microbatches": (microbatches if microbatches is not None
+                         else MICROBATCHES.get(arch, 1)) if shape.kind == "train" else None,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_rec,
+        "per_device": {
+            "flops": per_dev_flops,
+            "bytes_accessed": per_dev_bytes,
+            "collective_bytes": per_dev_coll,
+            "collectives": {k: adj[k] for k in hlo_cost.COLLECTIVES},
+            "xla_cost_analysis_raw": {"flops": float(cost.get("flops", 0.0)),
+                                      "bytes": float(cost.get("bytes accessed", 0.0)),
+                                      "collectives_unrolled_text": coll},
+        },
+        "roofline_s": {
+            "compute": per_dev_flops / HW["peak_flops_bf16"],
+            "memory": per_dev_bytes / HW["hbm_bw"],
+            "collective": per_dev_coll / HW["ici_link_bw"],
+        },
+        "layout": rules.layout_report(),
+        "tag": extra_tag,
+    }
+    terms = rec["roofline_s"]
+    rec["dominant"] = max(terms, key=terms.get)
+    return rec
+
+
+def artifact_path(arch, shape, multi_pod, tag=""):
+    mesh = "mp" if multi_pod else "sp"
+    suffix = f"-{tag}" if tag else ""
+    return os.path.join(ART_DIR, f"{arch}--{shape}--{mesh}{suffix}.json")
+
+
+def run_cell(arch, shape, multi_pod, force=False, tag="", **kw):
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = artifact_path(arch, shape, multi_pod, tag)
+    if os.path.exists(path) and not force:
+        print(f"[skip] {path}")
+        return json.load(open(path))
+    try:
+        rec = lower_cell(arch, shape, multi_pod, extra_tag=tag, **kw)
+        print(f"[ok] {arch} {shape} {'mp' if multi_pod else 'sp'} "
+              f"compile={rec['compile_s']}s dominant={rec['dominant']}")
+    except Exception as e:  # record failures so the sweep reports them
+        rec = {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:], "tag": tag}
+        print(f"[FAIL] {arch} {shape}: {type(e).__name__}: {e}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    fails = 0
+    if args.all:
+        for arch, cfg in all_configs().items():
+            for s in applicable_shapes(cfg):
+                for mp in meshes:
+                    rec = run_cell(arch, s.name, mp, force=args.force, tag=args.tag)
+                    fails += "error" in rec
+    else:
+        assert args.arch and args.shape
+        for mp in meshes:
+            rec = run_cell(args.arch, args.shape, mp, force=args.force, tag=args.tag)
+            fails += "error" in rec
+            if "error" in rec:
+                print(rec.get("trace", ""))
+    print(f"done, failures={fails}")
+    raise SystemExit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

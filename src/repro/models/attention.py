@@ -1,0 +1,157 @@
+"""GQA attention: qk-norm, qkv-bias, RoPE, KV cache, optional flash kernel.
+
+The pure-jnp path is the default (and the one the dry-run lowers, so
+``cost_analysis`` sees real einsum FLOPs). The Pallas flash kernel in
+``repro.kernels`` is opt-in via ``use_flash=True`` for TPU runs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rms_norm
+from repro.models.pdefs import ParamDef
+from repro.sharding.rules import shard
+
+NEG_INF = -2.3819763e38  # large negative for bf16-safe masking
+
+
+def attn_defs(cfg, std=0.02):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    defs = {
+        "wq": ParamDef((d, H, hd), ("hidden", "heads", "head_dim"), std=std),
+        "wk": ParamDef((d, KV, hd), ("hidden", "kv_heads", "kv_head_dim"), std=std),
+        "wv": ParamDef((d, KV, hd), ("hidden", "kv_heads", "kv_head_dim"), std=std),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "hidden"), std=std),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = ParamDef((KV, hd), ("kv_heads", "kv_head_dim"), init="zeros")
+        defs["bv"] = ParamDef((KV, hd), ("kv_heads", "kv_head_dim"), init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="zeros")
+        defs["k_norm"] = ParamDef((hd,), (None,), init="zeros")
+    return defs
+
+
+def _project_qkv(p, cfg, x, rope_sc):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope_sc is not None:
+        sin, cos = rope_sc
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q:[B,Sq,H,hd] k,v:[B,Sk,KV,hd]; GQA by head-group reshape. fp32 softmax."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _sdpa_chunked(q, k, v, causal, scale, block_q=512):
+    """Query-blocked exact attention: scores materialize per q-block only.
+
+    Pure-XLA flash-style scan (so dry-run cost_analysis sees the real dot
+    FLOPs); the Pallas kernel is the TPU-optimized twin of this."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    if Sq % bq:  # non-power-of-two seq (e.g. whisper's 1500 frames)
+        for cand in range(min(block_q, Sq), 0, -1):
+            if Sq % cand == 0:
+                bq = cand
+                break
+    nb = Sq // bq
+    qb = q.reshape(B, nb, bq, H, hd).swapaxes(0, 1)  # [nb,B,bq,H,hd]
+
+    def body(_, args):
+        i, qi = args
+        if causal:
+            qpos = i * bq + jnp.arange(bq)
+            mask = (qpos[:, None] >= jnp.arange(Sk)[None, :])[None, None, None]
+        else:
+            mask = None
+        out = _sdpa(qi, k, v, mask, scale)
+        return None, out
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, ob = jax.lax.scan(body, None, (jnp.arange(nb), qb))
+    return ob.swapaxes(0, 1).reshape(B, Sq, H, hd)
+
+
+def attn_apply(p, cfg, x, rope_sc, causal=True, use_flash=False):
+    """Full-sequence attention (train / prefill)."""
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    q, k, v = _project_qkv(p, cfg, x, rope_sc)
+    # NOTE: activations keep head_dim unsharded even when the weights use
+    # the head_dim fallback (non-divisible heads): contracting a sharded
+    # hd in the score einsum would all-reduce [B,*,S,block] fp32 tensors
+    # every block; gathering the (small) qkv weights instead is ~free.
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    if use_flash:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal)
+    elif x.shape[1] > 1024:
+        out = _sdpa_chunked(q, k, v, causal, scale)
+    else:
+        mask = None
+        if causal:
+            S = x.shape[1]
+            mask = jnp.tril(jnp.ones((S, S), bool))[None, None, None, :, :]
+        out = _sdpa(q, k, v, mask, scale)
+    out = shard(out, "batch", "seq", "heads", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+def attn_decode(p, cfg, x, rope_sc, cache_k, cache_v, pos):
+    """Single-token decode. x:[B,1,d]; cache:[B,S,KV,hd]; pos:[] int32."""
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    q, k, v = _project_qkv(p, cfg, x, rope_sc)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    S = cache_k.shape[1]
+    valid = (jnp.arange(S) <= pos)[None, None, None, None, :]
+    out = _sdpa(q, cache_k, cache_v, valid, scale)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (cache_k, cache_v)
+
+
+def cross_attn_apply(p, cfg, x, kv_cache):
+    """Cross attention against precomputed (k, v) from the encoder."""
+    hd = cfg.resolved_head_dim
+    scale = hd ** -0.5
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    k, v = kv_cache
+    out = _sdpa(q, k, v, None, scale)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_kv(p, cfg, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v

@@ -1,0 +1,150 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a stub: ``input_specs`` provides precomputed
+frame embeddings [B, n_frames, d]. Encoder = bidirectional self-attn
+stack; decoder = causal self-attn + cross-attn. Learned positions sized
+to the shape cell. Output projection tied to the decoder embedding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.pdefs import ParamDef, stack_defs
+from repro.sharding.rules import shard
+
+
+def _enc_layer_defs(cfg):
+    return {
+        "ln1": ParamDef((cfg.d_model,), ("hidden",), init="zeros"),
+        "attn": attn.attn_defs(cfg),
+        "ln2": ParamDef((cfg.d_model,), ("hidden",), init="zeros"),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _dec_layer_defs(cfg):
+    d = _enc_layer_defs(cfg)
+    d["ln_x"] = ParamDef((cfg.d_model,), ("hidden",), init="zeros")
+    d["xattn"] = attn.attn_defs(cfg)
+    return d
+
+
+def encdec_defs(cfg, s_max: int, std=0.02):
+    return {
+        "enc": {
+            "pos": ParamDef((cfg.n_frames, cfg.d_model), (None, "hidden"), std=std),
+            "blocks": stack_defs(_enc_layer_defs(cfg), cfg.n_enc_layers),
+            "final_norm": ParamDef((cfg.d_model,), ("hidden",), init="zeros"),
+        },
+        "dec": {
+            "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "hidden"), std=std),
+            "pos": ParamDef((s_max, cfg.d_model), (None, "hidden"), std=std),
+            "blocks": stack_defs(_dec_layer_defs(cfg), cfg.n_layers),
+            "final_norm": ParamDef((cfg.d_model,), ("hidden",), init="zeros"),
+        },
+    }
+
+
+def encode(params, cfg, frames, use_flash=False):
+    x = frames + params["enc"]["pos"].astype(frames.dtype)
+    def body(x, p):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, _ = attn.attn_apply(p["attn"], cfg, h, None, causal=False, use_flash=use_flash)
+        x = x + y
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h, cfg.act)
+        return shard(x, "batch", "seq_res", "hidden"), None
+    x, _ = jax.lax.scan(body, x, params["enc"]["blocks"])
+    return L.rms_norm(x, params["enc"]["final_norm"], cfg.norm_eps)
+
+
+def _dec_body(cfg, use_flash, mode):
+    def seq_body(x, xs):
+        p, kvx = xs
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, (k, v) = attn.attn_apply(p["attn"], cfg, h, None, causal=True, use_flash=use_flash)
+        x = x + y
+        h = L.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        x = x + attn.cross_attn_apply(p["xattn"], cfg, h, kvx)
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h, cfg.act)
+        x = shard(x, "batch", "seq_res", "hidden")
+        if mode == "prefill":
+            return x, (k, v)
+        return x, None
+    return seq_body
+
+
+def decode_train(params, cfg, tokens, enc_out, use_flash=False, remat=True):
+    """Teacher-forced decoder pass. Returns hidden [B,S,d]."""
+    S = tokens.shape[1]
+    x = L.embed_apply(params["dec"]["embed"], tokens)
+    x = x + params["dec"]["pos"][:S].astype(x.dtype)
+    cross = _cross_caches(params, cfg, enc_out)
+    body = _dec_body(cfg, use_flash, "train")
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["dec"]["blocks"], cross))
+    return L.rms_norm(x, params["dec"]["final_norm"], cfg.norm_eps)
+
+
+def _cross_caches(params, cfg, enc_out):
+    def body(_, p):
+        return None, attn.cross_kv(p["xattn"], cfg, enc_out)
+    _, cross = jax.lax.scan(body, None, params["dec"]["blocks"])
+    return cross
+
+
+def decode_prefill(params, cfg, tokens, enc_out, cache_dtype=jnp.bfloat16, use_flash=False):
+    """Returns (hidden, cache) where cache = {self_k, self_v, cross_k, cross_v}."""
+    S = tokens.shape[1]
+    x = L.embed_apply(params["dec"]["embed"], tokens)
+    x = x + params["dec"]["pos"][:S].astype(x.dtype)
+    cross = _cross_caches(params, cfg, enc_out)
+    body = _dec_body(cfg, use_flash, "prefill")
+    x, selfkv = jax.lax.scan(body, x, (params["dec"]["blocks"], cross))
+    cache = {"self_k": selfkv[0].astype(cache_dtype), "self_v": selfkv[1].astype(cache_dtype),
+             "cross_k": cross[0].astype(cache_dtype), "cross_v": cross[1].astype(cache_dtype)}
+    return L.rms_norm(x, params["dec"]["final_norm"], cfg.norm_eps), cache
+
+
+def decode_step(params, cfg, token, pos, cache):
+    """token: [B,1]; pos scalar. Returns (hidden, new_cache)."""
+    x = L.embed_apply(params["dec"]["embed"], token)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec"]["pos"], pos, 1, axis=0).astype(x.dtype)
+
+    def body(x, xs):
+        p, (sk, sv, xk, xv) = xs
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, (nk, nv) = attn.attn_decode(p["attn"], cfg, h, None, sk, sv, pos)
+        x = x + y
+        h = L.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        x = x + attn.cross_attn_apply(p["xattn"], cfg, h, (xk, xv))
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h, cfg.act)
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec"]["blocks"],
+                  (cache["self_k"], cache["self_v"], cache["cross_k"], cache["cross_v"])))
+    new_cache = dict(cache, self_k=nk, self_v=nv)
+    return L.rms_norm(x, params["dec"]["final_norm"], cfg.norm_eps), new_cache
+
+
+def encdec_cache_specs(cfg, batch, s_max, dtype=jnp.bfloat16):
+    KV, hd, Ld = cfg.n_kv_heads, cfg.resolved_head_dim, cfg.n_layers
+    F = cfg.n_frames
+    return {
+        "self_k": jax.ShapeDtypeStruct((Ld, batch, s_max, KV, hd), dtype),
+        "self_v": jax.ShapeDtypeStruct((Ld, batch, s_max, KV, hd), dtype),
+        "cross_k": jax.ShapeDtypeStruct((Ld, batch, F, KV, hd), dtype),
+        "cross_v": jax.ShapeDtypeStruct((Ld, batch, F, KV, hd), dtype),
+    }
+
+
+def logits(params, cfg, x):
+    out = jnp.einsum("bsd,vd->bsv", x, params["dec"]["embed"])
+    return shard(out, "batch", "seq", "vocab")

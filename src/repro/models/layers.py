@@ -1,0 +1,103 @@
+"""Shared layer primitives: norms, RoPE, activations, GLU MLP, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.pdefs import ParamDef
+from repro.sharding.rules import shard
+
+
+def rms_norm(x, weight, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------- RoPE ----------------
+
+def rope_tables(positions, head_dim, theta):
+    """positions: int32 [...]. Returns (sin, cos) of shape [..., head_dim//2], fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: [B, S, H, D]; sin/cos: [B, S, D//2] or [S, D//2]."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:  # [S, half] -> broadcast over batch and heads
+        sin = sin[None, :, None, :]
+        cos = cos[None, :, None, :]
+    else:              # [B, S, half]
+        sin = sin[:, :, None, :]
+        cos = cos[:, :, None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(dt)
+
+
+# ---------------- activations ----------------
+
+def activation(name, x, gate=None):
+    if name == "swiglu":
+        return jax.nn.silu(gate) * x
+    if name == "geglu":
+        return jax.nn.gelu(gate) * x
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu_sq":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------- GLU MLP ----------------
+
+def mlp_defs(d_model, d_ff, act, std=0.02):
+    gated = act in ("swiglu", "geglu")
+    defs = {
+        "up": ParamDef((d_model, d_ff), ("hidden", "ffn"), std=std),
+        "down": ParamDef((d_ff, d_model), ("ffn", "hidden"), std=std),
+    }
+    if gated:
+        defs["gate"] = ParamDef((d_model, d_ff), ("hidden", "ffn"), std=std)
+    return defs
+
+
+def mlp_apply(p, x, act):
+    b, s, _ = x.shape
+    h = jnp.einsum("bsd,df->bsf", x, p["up"])
+    if "gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["gate"])
+        h = activation(act, h, g)
+    else:
+        h = activation(act, h)
+    h = shard(h, "batch", "seq", "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, p["down"])
+
+
+# ---------------- embeddings ----------------
+
+def embed_defs(vocab, d_model, std=0.02):
+    return ParamDef((vocab, d_model), ("vocab", "hidden"), std=std)
+
+
+def embed_apply(table, tokens, scale=None):
+    y = jnp.take(table, tokens, axis=0)
+    if scale is not None:
+        y = y * scale
+    return y

@@ -1,0 +1,139 @@
+"""Mamba (selective SSM) mixer with chunked selective scan.
+
+Full-sequence processing scans over chunks (``cfg.ssm.chunk`` tokens) and
+uses an associative scan *within* each chunk, so the materialized
+discretized-state tensor is only [B, chunk, d_inner, d_state] — this is
+what makes train_4k and long-context shapes fit HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.pdefs import ParamDef
+from repro.sharding.rules import shard
+
+
+def mamba_defs(cfg, std=0.02):
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    R = cfg.dt_rank
+    N = s.d_state
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("hidden", "ffn"), std=std),
+        "conv_w": ParamDef((s.d_conv, di), (None, "ffn"), std=std),
+        "conv_b": ParamDef((di,), ("ffn",), init="zeros"),
+        "x_proj": ParamDef((di, R + 2 * N), ("ffn", None), std=std),
+        "dt_w": ParamDef((R, di), (None, "ffn"), std=std),
+        "dt_b": ParamDef((di,), ("ffn",), init="zeros"),
+        "A_log": ParamDef((di, N), ("ffn", "d_state"), init="hippo"),
+        "D": ParamDef((di,), ("ffn",), init="ones"),
+        "out_proj": ParamDef((di, d), ("ffn", "hidden"), std=std),
+    }
+
+
+def _causal_conv(u, w, b, init_state=None):
+    """u:[B,S,di]; w:[K,di] depthwise causal. init_state:[B,K-1,di] or None."""
+    K = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([init_state, u], axis=1)
+    y = sum(up[:, i:i + u.shape[1], :] * w[i] for i in range(K))
+    new_state = up[:, up.shape[1] - (K - 1):, :]
+    return y + b, new_state
+
+
+def _ssm_params(p, cfg, u):
+    """u:[B,T,di] (post conv+silu) -> dt:[B,T,di], Bm/Cm:[B,T,N] (fp32)."""
+    s = cfg.ssm
+    R = cfg.dt_rank
+    N = s.d_state
+    xdbc = jnp.einsum("btd,dk->btk", u, p["x_proj"]).astype(jnp.float32)
+    dt_lo, Bm, Cm = jnp.split(xdbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("btr,rd->btd", dt_lo, p["dt_w"].astype(jnp.float32))
+                         + p["dt_b"].astype(jnp.float32) - 4.0)
+    return dt, Bm, Cm
+
+
+def _chunk_scan(dA, dBu, h0):
+    """dA,dBu:[B,T,di,N] fp32; h0:[B,di,N]. Returns hs:[B,T,di,N], hT."""
+    def comb(a, b):
+        return (a[0] * b[0], b[1] + b[0] * a[1])
+    a_cum, b_cum = jax.lax.associative_scan(comb, (dA, dBu), axis=1)
+    hs = b_cum + a_cum * h0[:, None]
+    return hs, hs[:, -1]
+
+
+def mamba_seq(p, cfg, x, state=None):
+    """Full-sequence mamba. x:[B,S,d]. Returns (y, new_state)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di = s.expand * d
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xz = shard(xz, "batch", "seq", "ffn")
+    u, z = jnp.split(xz, 2, axis=-1)
+    z = shard(z, "batch", "seq", "ffn")
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    u = jax.nn.silu(u)
+    u = shard(u, "batch", "seq", "ffn")
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [di,N]
+    h0 = jnp.zeros((B, di, s.d_state), jnp.float32) if state is None else state["h"]
+
+    T = min(s.chunk, S)
+    while S % T:  # non-divisible seq: largest divisor <= chunk
+        T -= 1
+    nc = S // T
+    uc = u.reshape(B, nc, T, di).swapaxes(0, 1)                # [nc,B,T,di]
+
+    def body(h, u_t):
+        u_t = shard(u_t, "batch", None, "ffn")
+        dt, Bm, Cm = _ssm_params(p, cfg, u_t)
+        dt = shard(dt, "batch", None, "ffn")
+        dA = jnp.exp(dt[..., None] * A)                        # [B,T,di,N]
+        dBu = (dt * u_t.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+        dA = shard(dA, "batch", None, "ffn", None)
+        dBu = shard(dBu, "batch", None, "ffn", None)
+        hs, hT = _chunk_scan(dA, dBu, h)
+        y = jnp.einsum("btdn,btn->btd", hs, Cm)
+        y = y + u_t.astype(jnp.float32) * p["D"].astype(jnp.float32)
+        return shard(hT, "batch", "ffn", None), y.astype(x.dtype)
+
+    # nested remat: group-level backward recomputes chunk internals one
+    # chunk at a time instead of holding [B,S,di,N]-scale tensors live
+    hT, yc = jax.lax.scan(jax.checkpoint(body, prevent_cse=False), h0, uc)
+    y = yc.swapaxes(0, 1).reshape(B, S, di)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "h": hT}
+
+
+def mamba_decode(p, cfg, x, state):
+    """Single-token decode. x:[B,1,d]."""
+    s = cfg.ssm
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    u = jax.nn.silu(u)
+    dt, Bm, Cm = _ssm_params(p, cfg, u)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0, :, None] * A)                        # [B,di,N]
+    dBu = (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = dA * state["h"] + dBu
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])
+    y = y + u[:, 0].astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(x.dtype)[:, None, :] * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "h": h}
+
+
+def mamba_state_defs(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, di), dtype),
+        "h": jax.ShapeDtypeStruct((batch, di, s.d_state), jnp.float32),
+    }

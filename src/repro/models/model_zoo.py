@@ -1,0 +1,229 @@
+"""Model zoo: build per-(arch, shape) functional models.
+
+``build(cfg, s_max)`` returns a :class:`Model` whose pure functions are
+what the launchers jit/lower: ``loss_fn`` (train), ``prefill_fn``,
+``decode_fn`` (serve). Inputs for the dry-run come from
+``input_specs(shape)`` as ShapeDtypeStructs (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import encdec as ed
+from repro.models import pdefs
+from repro.models import transformer as tf
+from repro.sharding.rules import Rules, shard
+
+
+def _ce_loss(cfg, logits, targets, mask=None):
+    """fp32 CE with padded-vocab masking + z-loss."""
+    logits = logits.astype(jnp.float32)
+    pad_bias = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab_size, 0.0, -1e9)
+    logits = logits + pad_bias
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    z = 1e-4 * lse ** 2
+    per_tok = nll + z
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (per_tok * mask).sum() / denom
+
+
+def _block_len(S, target=512, align=16):
+    """Largest block <= target dividing S, preferring SP-friendly multiples."""
+    for bs in range(min(target, S), 0, -1):
+        if S % bs == 0 and bs % align == 0:
+            return bs
+    for bs in range(min(target, S), 0, -1):
+        if S % bs == 0:
+            return bs
+    return S
+
+
+def _ce_loss_chunked(cfg, head_fn, h, targets, block=512):
+    """Chunked CE: logits are materialized one seq-block at a time and
+    recomputed in the backward pass (the full [B,S,V] fp32 logits tensor
+    never exists)."""
+    B, S, _ = h.shape
+    bs = _block_len(S, block)
+    nb = S // bs
+    hb = h.reshape(B, nb, bs, -1).swapaxes(0, 1)
+    tb = targets.reshape(B, nb, bs).swapaxes(0, 1)
+    # keep each chunk sequence-sharded: without this the reshape forces a
+    # full fp32 all-gather of the hidden states (and replicated dW chunks)
+    hb = shard(hb, None, "batch", "seq_res", "hidden")
+
+    def body(acc, xs):
+        hi, ti = xs
+        loss = _ce_loss(cfg, head_fn(hi), ti)
+        return acc + loss, None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hb, tb))
+    return tot / nb
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+    s_max: int
+    defs: Any
+    loss_fn: Callable            # (params, batch) -> (loss, metrics)
+    prefill_fn: Optional[Callable]   # (params, batch) -> (last_logits, cache)
+    decode_fn: Optional[Callable]    # (params, cache, token, pos) -> (logits, cache)
+    cache_specs: Optional[Callable]  # (batch_size) -> SDS tree
+    cache_pspecs: Optional[Callable] # (batch_size, rules) -> pspec tree
+
+    def init(self, key, dtype=jnp.float32):
+        return pdefs.init_tree(key, self.defs, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return pdefs.abstract_tree(self.defs, dtype)
+
+    def param_pspecs(self, rules: Rules):
+        return pdefs.pspec_tree(self.defs, rules.resolve)
+
+    def n_params(self) -> int:
+        return pdefs.count_params(self.defs)
+
+    # ---- input specs for the dry-run ----
+    def input_specs(self, shape) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        d = cfg.d_model
+        if shape.kind == "train":
+            out = {"tokens": jax.ShapeDtypeStruct((B, self._tok_len(S)), jnp.int32),
+                   "targets": jax.ShapeDtypeStruct((B, self._tok_len(S)), jnp.int32)}
+        elif shape.kind == "prefill":
+            out = {"tokens": jax.ShapeDtypeStruct((B, self._tok_len(S)), jnp.int32)}
+        else:  # decode
+            out = {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                   "pos": jax.ShapeDtypeStruct((), jnp.int32),
+                   "cache": self.cache_specs(B)}
+        if cfg.family == "vlm" and shape.kind != "decode":
+            out["patches"] = jax.ShapeDtypeStruct((B, cfg.n_patches, d), jnp.bfloat16)
+        if cfg.family == "encdec" and shape.kind != "decode":
+            out["frames"] = jax.ShapeDtypeStruct((B, cfg.n_frames, d), jnp.bfloat16)
+        return out
+
+    def input_pspecs(self, shape, rules: Rules) -> Dict[str, Any]:
+        cfg = self.cfg
+        B = shape.global_batch
+        bax = rules.resolve("batch", B)
+        out: Dict[str, Any] = {}
+        if shape.kind == "train":
+            out = {"tokens": P(bax, None), "targets": P(bax, None)}
+        elif shape.kind == "prefill":
+            out = {"tokens": P(bax, None)}
+        else:
+            out = {"token": P(bax, None), "pos": P(),
+                   "cache": self.cache_pspecs(B, rules)}
+        if cfg.family == "vlm" and shape.kind != "decode":
+            out["patches"] = P(bax, None, None)
+        if cfg.family == "encdec" and shape.kind != "decode":
+            out["frames"] = P(bax, None, None)
+        return out
+
+    def _tok_len(self, S):
+        # VLM cells: patch prefix + tokens = S total positions
+        if self.cfg.family == "vlm":
+            return S - self.cfg.n_patches
+        return S
+
+
+# ---------------- decoder-only LM (dense/moe/hybrid/ssm/vlm) ----------------
+
+def _build_lm(cfg, s_max, use_flash=False, remat=True, cache_dtype=jnp.bfloat16):
+    defs = tf.lm_defs(cfg)
+
+    def embed_inputs(params, batch, S_tok):
+        x = tf.embed_tokens(params, cfg, batch["tokens"])
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        return shard(x, "batch", "seq", "hidden")
+
+    def loss_fn(params, batch):
+        S_tok = batch["tokens"].shape[1]
+        x = embed_inputs(params, batch, S_tok)
+        positions = jnp.arange(x.shape[1])
+        h, aux = tf.forward_train(params, cfg, x, positions, remat=remat,
+                                  use_flash=use_flash)
+        if cfg.family == "vlm":  # loss only on token region
+            h = h[:, cfg.n_patches:, :]
+        head = lambda hi: tf.logits_from_hidden(params, cfg, hi)
+        ce = _ce_loss_chunked(cfg, head, h, batch["targets"])
+        loss = ce + aux["moe_aux"] + aux["moe_z"]
+        return loss, {"ce": ce, "moe_aux": aux["moe_aux"], "moe_z": aux["moe_z"]}
+
+    def prefill_fn(params, batch):
+        x = embed_inputs(params, batch, batch["tokens"].shape[1])
+        positions = jnp.arange(x.shape[1])
+        h, cache = tf.forward_prefill(params, cfg, x, positions, s_max=x.shape[1],
+                                      use_flash=use_flash)
+        logits = tf.logits_from_hidden(params, cfg, h[:, -1:, :])
+        return logits, cache
+
+    def decode_fn(params, cache, token, pos):
+        x = tf.embed_tokens(params, cfg, token)
+        h, cache = tf.forward_decode(params, cfg, x, pos, cache)
+        logits = tf.logits_from_hidden(params, cfg, h)
+        return logits, cache
+
+    return Model(
+        cfg=cfg, s_max=s_max, defs=defs,
+        loss_fn=loss_fn, prefill_fn=prefill_fn, decode_fn=decode_fn,
+        cache_specs=lambda B: tf.cache_specs(cfg, B, s_max, cache_dtype),
+        cache_pspecs=lambda B, rules: tf.cache_pspecs(cfg, B, s_max, rules),
+    )
+
+
+# ---------------- encoder-decoder (whisper) ----------------
+
+def _build_encdec(cfg, s_max, use_flash=False, remat=True, cache_dtype=jnp.bfloat16):
+    defs = ed.encdec_defs(cfg, s_max)
+
+    def loss_fn(params, batch):
+        enc_out = ed.encode(params, cfg, batch["frames"], use_flash)
+        h = ed.decode_train(params, cfg, batch["tokens"], enc_out, use_flash, remat)
+        head = lambda hi: ed.logits(params, cfg, hi)
+        loss = _ce_loss_chunked(cfg, head, h, batch["targets"])
+        return loss, {"ce": loss}
+
+    def prefill_fn(params, batch):
+        enc_out = ed.encode(params, cfg, batch["frames"], use_flash)
+        h, cache = ed.decode_prefill(params, cfg, batch["tokens"], enc_out)
+        logits = ed.logits(params, cfg, h[:, -1:, :])
+        return logits, cache
+
+    def decode_fn(params, cache, token, pos):
+        h, cache = ed.decode_step(params, cfg, token, pos, cache)
+        logits = ed.logits(params, cfg, h)
+        return logits, cache
+
+    def cache_pspecs(B, rules):
+        bax = rules.resolve("batch", B)
+        kv = rules.resolve("kv_heads", cfg.n_kv_heads)
+        hd = rules.resolve("kv_head_dim", cfg.resolved_head_dim)
+        spec = P(None, bax, None, kv, hd)
+        return {k: spec for k in ("self_k", "self_v", "cross_k", "cross_v")}
+
+    return Model(
+        cfg=cfg, s_max=s_max, defs=defs,
+        loss_fn=loss_fn, prefill_fn=prefill_fn, decode_fn=decode_fn,
+        cache_specs=lambda B: ed.encdec_cache_specs(cfg, B, s_max, cache_dtype),
+        cache_pspecs=cache_pspecs,
+    )
+
+
+def build(cfg, s_max: int, use_flash: bool = False, remat: bool = True,
+          cache_dtype=jnp.bfloat16) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg, s_max, use_flash, remat, cache_dtype)
+    return _build_lm(cfg, s_max, use_flash, remat, cache_dtype)

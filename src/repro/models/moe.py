@@ -1,0 +1,92 @@
+"""Top-k MoE with capacity-based one-hot dispatch (GSPMD/MaxText style).
+
+Experts shard over the "model" mesh axis (expert parallelism). Tokens are
+grouped along the batch dim; the dispatch/combine tensors are built as
+products of an expert one-hot and a slot one-hot so XLA keeps everything
+as sharded einsums (all-to-all emerges from the resharding between the
+token-sharded and expert-sharded operands).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation
+from repro.models.pdefs import ParamDef
+from repro.sharding.rules import shard
+
+
+def moe_defs(cfg, std=0.02):
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.n_experts, m.d_ff
+    defs = {
+        "router": ParamDef((d, E), ("hidden", "experts"), std=std),
+        "up": ParamDef((E, d, f), ("experts", "hidden", "ffn"), std=std),
+        "down": ParamDef((E, f, d), ("experts", "ffn", "hidden"), std=std),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        defs["gate"] = ParamDef((E, d, f), ("experts", "hidden", "ffn"), std=std)
+    return defs
+
+
+def capacity(tokens_per_group: int, n_experts: int, top_k: int, cf: float) -> int:
+    c = int(math.ceil(tokens_per_group * top_k * cf / n_experts))
+    return max(c, 1)
+
+
+def moe_apply(p, cfg, x) -> Tuple[jnp.ndarray, dict]:
+    """x: [B, S, d] -> (y, aux) where aux carries load-balance/z losses.
+
+    Tokens regroup into dispatch groups of ``group_size`` so the dispatch
+    tensor is O(tokens * group_size * top_k * cf) — independent of E."""
+    m = cfg.moe
+    B0, S0, d = x.shape
+    M = min(m.group_size, S0)
+    while S0 % M:
+        M -= 1
+    x = x.reshape(B0 * (S0 // M), M, d)
+    B, S, _ = x.shape
+    E, K = m.n_experts, m.top_k
+    C = capacity(S, E, K, m.capacity_factor)
+
+    # --- routing (fp32) ---
+    logits = jnp.einsum("gsd,de->gse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # [G,S,K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (Switch-style load balance + router z-loss)
+    me = jnp.mean(probs, axis=(0, 1))                          # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=2), axis=(0, 1))
+    aux_loss = E * jnp.sum(me * ce) * m.aux_coef
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2) * m.router_z_coef
+
+    # --- capacity assignment ---
+    oh_e = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)      # [G,S,K,E]
+    # position of each (token, k) within its expert queue, priority by (s, k)
+    pos = jnp.cumsum(oh_e.reshape(B, S * K, E), axis=1).reshape(B, S, K, E) * oh_e - 1
+    slot = jnp.sum(pos * oh_e, axis=-1)                        # [G,S,K]
+    keep = (slot >= 0) & (slot < C)
+    oh_c = jax.nn.one_hot(slot, C, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+
+    oh_e_f = oh_e.astype(x.dtype)
+    # dispatch/combine: [G,S,E,C]
+    dispatch = jnp.einsum("gske,gskc->gsec", oh_e_f, oh_c)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", oh_e_f, oh_c, gate_vals.astype(x.dtype))
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, x)
+    xe = shard(xe, "batch", "experts", None, "hidden")
+    h = jnp.einsum("gecd,edf->gecf", xe, p["up"])
+    if "gate" in p:
+        g = jnp.einsum("gecd,edf->gecf", xe, p["gate"])
+        h = activation(cfg.act, h, g)
+    else:
+        h = activation(cfg.act, h)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["down"])
+    ye = shard(ye, "batch", "experts", None, "hidden")
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye)
+    return y.reshape(B0, S0, d), {"moe_aux": aux_loss, "moe_z": z_loss}

@@ -1,0 +1,87 @@
+"""Single-source-of-truth parameter definitions.
+
+Each parameter is declared once as a :class:`ParamDef` carrying its shape,
+*logical* axis names, and init recipe. From a (nested) tree of ParamDefs we
+derive: concrete init, ShapeDtypeStruct stand-ins (dry-run), and
+PartitionSpecs (via the sharding rules resolver).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"                 # normal | zeros | ones
+    std: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _map(defs, fn):
+    return jax.tree_util.tree_map(fn, defs, is_leaf=is_def)
+
+
+def init_tree(key, defs, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        elif d.init == "hippo":
+            # S4D-real init: A_log[..., n] = log(n+1), broadcast over leading dims
+            n = d.shape[-1]
+            row = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+            out.append(jnp.broadcast_to(row, d.shape).astype(dtype))
+        else:
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * d.std).astype(dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_tree(defs, dtype=jnp.float32):
+    return _map(defs, lambda d: jax.ShapeDtypeStruct(d.shape, dtype))
+
+
+def pspec_tree(defs, resolve):
+    """resolve(logical_name, dim_size) -> mesh axis (or None)."""
+    def one(d: ParamDef):
+        axes = []
+        used = set()
+        for name, size in zip(d.logical, d.shape):
+            ax = resolve(name, size) if name else None
+            # a mesh axis may appear at most once per spec
+            if ax is not None and (ax in used or (isinstance(ax, tuple) and any(a in used for a in ax))):
+                ax = None
+            if ax is not None:
+                used.update(ax if isinstance(ax, tuple) else (ax,))
+            axes.append(ax)
+        while axes and axes[-1] is None:
+            axes.pop()
+        return P(*axes)
+    return _map(defs, one)
+
+
+def stack_defs(defs, n: int, axis_name: Optional[str] = None):
+    """Prepend a stacking dim (for scan-over-layers) to every ParamDef."""
+    return _map(defs, lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.logical, d.init, d.std))
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))

@@ -1,0 +1,193 @@
+"""RWKV-6 (Finch) mixer: data-dependent decay linear attention.
+
+Time-mix uses the DDLerp token-shift (low-rank modulated mixes for
+r/k/v/w/g), a per-channel data-dependent decay w_t = exp(-exp(w0 +
+lora(x))) and the bonus term u. Full-sequence processing is *chunked*:
+within a chunk the decay products are formed in log space (all exponents
+<= 0, so no overflow) and contracted as [T, T, head_dim] fp32 blocks;
+across chunks a lax.scan carries the [B, H, hd, hd] wkv state. Decode is
+the O(1) recurrent update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation
+from repro.models.pdefs import ParamDef
+from repro.sharding.rules import shard
+
+TM_LORA = 32
+DECAY_LORA = 64
+
+
+def rwkv_defs(cfg, std=0.02):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = cfg.resolved_head_dim
+    f = cfg.d_ff
+    return {
+        "tm": {
+            "mix_base": ParamDef((5, d), (None, "hidden"), init="zeros"),
+            "mix_lora_a": ParamDef((d, 5 * TM_LORA), ("hidden", None), std=std),
+            "mix_lora_b": ParamDef((5, TM_LORA, d), (None, None, "hidden"), std=std),
+            "wr": ParamDef((d, H, hd), ("hidden", "heads", None), std=std),
+            "wk": ParamDef((d, H, hd), ("hidden", "heads", None), std=std),
+            "wv": ParamDef((d, H, hd), ("hidden", "heads", None), std=std),
+            "wg": ParamDef((d, H, hd), ("hidden", "heads", None), std=std),
+            "wo": ParamDef((H, hd, d), ("heads", None, "hidden"), std=std),
+            "w0": ParamDef((H, hd), ("heads", None), init="zeros"),
+            "decay_a": ParamDef((d, DECAY_LORA), ("hidden", None), std=std),
+            "decay_b": ParamDef((DECAY_LORA, H, hd), (None, "heads", None), std=std),
+            "u": ParamDef((H, hd), ("heads", None), init="zeros"),
+            "ln_w": ParamDef((H, hd), ("heads", None), init="ones"),
+            "ln_b": ParamDef((H, hd), ("heads", None), init="zeros"),
+        },
+        "cm": {
+            "mix_k": ParamDef((d,), ("hidden",), init="zeros"),
+            "mix_r": ParamDef((d,), ("hidden",), init="zeros"),
+            "wk": ParamDef((d, f), ("hidden", "ffn"), std=std),
+            "wv": ParamDef((f, d), ("ffn", "hidden"), std=std),
+            "wr": ParamDef((d, d), ("hidden", "hidden_tp"), std=std),
+        },
+    }
+
+
+def _token_shift(x, last_x):
+    """x:[B,S,d]; last_x:[B,d] (previous token across call boundary)."""
+    prev = jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+    return prev, x[:, -1, :]
+
+
+def _ddlerp(p, x, prev):
+    """Returns the five DDLerp-mixed streams [5][B,S,d]: r,k,v,w,g order."""
+    dx = prev - x
+    xxx = x + dx * p["mix_base"].sum(0) * 0.0  # base offset folded into per-stream below
+    lo = jnp.tanh(jnp.einsum("bsd,dk->bsk", x + dx * 0.5, p["mix_lora_a"]))
+    lo = lo.reshape(*lo.shape[:-1], 5, TM_LORA)
+    mod = jnp.einsum("bsik,ikd->bsid", lo, p["mix_lora_b"])    # [B,S,5,d]
+    mixes = x[:, :, None, :] + dx[:, :, None, :] * (p["mix_base"][None, None] + mod)
+    del xxx
+    return [mixes[:, :, i, :] for i in range(5)]
+
+
+def _decay(p, mix_w):
+    """w in (0,1): [B,S,H,hd] fp32 log-decay (<=0)."""
+    lo = jnp.tanh(jnp.einsum("bsd,dk->bsk", mix_w, p["decay_a"]))
+    dw = jnp.einsum("bsk,khd->bshd", lo, p["decay_b"])
+    logw = -jnp.exp((p["w0"][None, None] + dw).astype(jnp.float32) - 0.5)
+    return logw  # log(w_t) = -exp(...) <= 0
+
+
+def _wkv_chunk(r, k, v, logw, u, S0):
+    """One chunk, fp32. r,k,v,logw: [B,H,T,hd]; u:[H,hd]; S0:[B,H,hd,hd].
+
+    y_t = r_t S_{t-1} + (r_t*u*k_t)·v_t ; S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    cum = jnp.cumsum(logw, axis=2)                             # [B,H,T,hd]
+    cum_prev = cum - logw                                      # cum_{t-1}
+    # inter-chunk: a_t = r_t * exp(cum_{t-1})  (exponent <= 0)
+    a = r * jnp.exp(cum_prev)
+    y_inter = jnp.einsum("bhtc,bhcv->bhtv", a, S0)
+    # intra-chunk: Q[t,s] = sum_c r_t[c] k_s[c] exp(cum_{t-1}[c] - cum_s[c]), s < t
+    T = r.shape[2]
+    D = cum_prev[:, :, :, None, :] - cum[:, :, None, :, :]     # [B,H,T,S,hd]
+    mask = (jnp.arange(T)[:, None] > jnp.arange(T)[None, :])[None, None, :, :, None]
+    W = jnp.exp(jnp.where(mask, D, -jnp.inf))
+    Q = jnp.einsum("bhtc,bhsc,bhtsc->bhts", r, k, W)
+    bonus = jnp.einsum("bhtc,bhtc->bht", r * u[None, :, None, :], k)
+    Q = Q + jnp.eye(T)[None, None] * bonus[:, :, :, None]
+    y_intra = jnp.einsum("bhts,bhsv->bhtv", Q, v)
+    # state update: S_T = exp(cum_T) S_0 + sum_s (k_s exp(cum_T - cum_s))^T v_s
+    decay_total = jnp.exp(cum[:, :, -1])                       # [B,H,hd]
+    kd = k * jnp.exp(cum[:, :, -1:, :] - cum)
+    S_new = decay_total[..., None] * S0 + jnp.einsum("bhtc,bhtv->bhcv", kd, v)
+    return y_inter + y_intra, S_new
+
+
+def _group_norm(x, w, b, eps=64e-5):
+    """x:[B,S,H,hd]; per-head layer norm (rwkv ln_x)."""
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def time_mix_seq(p, cfg, x, state):
+    """x:[B,S,d]; state {'last_x':[B,d], 'wkv':[B,H,hd,hd] fp32}."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    prev, new_last = _token_shift(x, state["last_x"])
+    mr, mk, mv, mw, mg = _ddlerp(p, x, prev)
+    r = jnp.einsum("bsd,dhk->bhsk", mr, p["wr"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bhsk", mk, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bhsk", mv, p["wv"]).astype(jnp.float32)
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", mg, p["wg"]))
+    logw = _decay(p, mw).swapaxes(1, 2)                        # [B,H,S,hd]
+
+    T = min(cfg.ssm.chunk if cfg.ssm else 128, S)
+    while S % T:  # non-divisible seq: largest divisor <= chunk
+        T -= 1
+    nc = S // T
+    def split(z):
+        return z.reshape(B, H, nc, T, hd).swapaxes(0, 2).swapaxes(1, 2)  # [nc,B,H,T,hd]
+    rc, kc, vc, wc = split(r), split(k), split(v), split(logw)
+
+    u = p["u"].astype(jnp.float32)
+    def body(S0, xs):
+        rt, kt, vt, wt = xs
+        y, S1 = _wkv_chunk(rt, kt, vt, wt, u, S0)
+        return S1, y
+    # nested remat: the [B,H,T,T,hd] decay blocks never outlive a chunk
+    S_new, yc = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                             state["wkv"], (rc, kc, vc, wc))
+    y = yc.swapaxes(1, 2).swapaxes(0, 2).reshape(B, H, S, hd).swapaxes(1, 2)  # [B,S,H,hd]
+    y = _group_norm(y.astype(jnp.float32), p["ln_w"], p["ln_b"]).astype(x.dtype)
+    y = y * g
+    y = shard(y, "batch", "seq", "heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    return out, {"last_x": new_last, "wkv": S_new}
+
+
+def time_mix_decode(p, cfg, x, state):
+    """x:[B,1,d]."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    prev = state["last_x"][:, None, :]
+    mr, mk, mv, mw, mg = _ddlerp(p, x, prev)
+    r = jnp.einsum("bsd,dhk->bhk", mr[:, 0:1], p["wr"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bhk", mk[:, 0:1], p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bhk", mv[:, 0:1], p["wv"]).astype(jnp.float32)
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bhk", mg[:, 0:1], p["wg"]))
+    w = jnp.exp(_decay(p, mw)[:, 0])                           # [B,H,hd]
+    u = p["u"].astype(jnp.float32)
+    S0 = state["wkv"]
+    kv = k[..., :, None] * v[..., None, :]                     # [B,H,hd,hd]
+    y = jnp.einsum("bhc,bhcv->bhv", r, S0) + jnp.einsum("bhc,bhcv->bhv", r * u[None], kv)
+    S1 = w[..., :, None] * S0 + kv
+    y = _group_norm(y[:, None, :, :], p["ln_w"], p["ln_b"])[:, 0].astype(x.dtype)
+    y = (y * g).reshape(B, 1, H * hd).reshape(B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    return out, {"last_x": x[:, 0, :], "wkv": S1}
+
+
+def channel_mix(p, cfg, x, state):
+    """x:[B,S,d]; state {'last_x':[B,d]}. Works for S==1 (decode) too."""
+    prev, new_last = _token_shift(x, state["last_x"])
+    dx = prev - x
+    xk = x + dx * p["mix_k"]
+    xr = x + dx * p["mix_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = activation("relu_sq", k)
+    k = shard(k, "batch", "seq", "ffn")
+    v = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    return r * v, {"last_x": new_last}
+
+
+def rwkv_state_defs(cfg, batch, dtype=jnp.float32):
+    H, hd, d = cfg.n_heads, cfg.resolved_head_dim, cfg.d_model
+    return {
+        "tm": {"last_x": jax.ShapeDtypeStruct((batch, d), dtype),
+               "wkv": jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32)},
+        "cm": {"last_x": jax.ShapeDtypeStruct((batch, d), dtype)},
+    }

@@ -1,0 +1,333 @@
+"""Unified decoder stack: scan-over-layers with heterogeneous block patterns.
+
+A *pattern* of period P describes each layer position's (mixer, mlp) pair —
+dense archs have P=1 (attn+dense), jamba has P=8 (7 mamba + 1 attn, MoE on
+odd positions), rwkv has P=1 (time-mix + channel-mix). Parameters are
+stacked over n_layers // P groups and the stack is a single ``lax.scan``,
+which keeps the lowered HLO small enough to compile 512-device meshes
+quickly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rk
+from repro.models.pdefs import ParamDef, stack_defs
+from repro.sharding.rules import shard
+
+
+# ---------------- pattern ----------------
+
+def layer_pattern(cfg) -> Tuple[Tuple[str, str], ...]:
+    moe_every = cfg.moe.every if cfg.moe else 1
+    P = 1
+    for k in (cfg.attn_every, moe_every):
+        P = P * k // math.gcd(P, k)
+    out = []
+    for p in range(P):
+        if cfg.attn_free:
+            mixer = "rwkv"
+        elif cfg.ssm is not None and cfg.attn_every > 1:
+            mixer = "attn" if p % cfg.attn_every == cfg.attn_every // 2 else "mamba"
+        else:
+            mixer = "attn"
+        if cfg.attn_free:
+            mlp = "rwkv_cm"
+        elif cfg.moe and p % moe_every == moe_every - 1:
+            mlp = "moe"
+        else:
+            mlp = "dense"
+        out.append((mixer, mlp))
+    assert cfg.n_layers % P == 0, (cfg.n_layers, P)
+    return tuple(out)
+
+
+def n_groups(cfg) -> int:
+    return cfg.n_layers // len(layer_pattern(cfg))
+
+
+# ---------------- parameter definitions ----------------
+
+def _pos_defs(cfg, mixer, mlp):
+    d = cfg.d_model
+    defs = {"ln1": ParamDef((d,), ("hidden",), init="zeros"),
+            "ln2": ParamDef((d,), ("hidden",), init="zeros")}
+    if mixer == "attn":
+        defs["mixer"] = attn.attn_defs(cfg)
+    elif mixer == "mamba":
+        defs["mixer"] = mb.mamba_defs(cfg)
+    elif mixer == "rwkv":
+        rdefs = rk.rwkv_defs(cfg)
+        defs["mixer"] = rdefs["tm"]
+        defs["cm"] = rdefs["cm"]
+    if mlp == "dense":
+        defs["mlp"] = L.mlp_defs(d, cfg.d_ff, cfg.act)
+    elif mlp == "moe":
+        defs["mlp"] = moe_mod.moe_defs(cfg)
+    return defs
+
+
+def lm_defs(cfg, std=0.02):
+    pat = cfg and layer_pattern(cfg)
+    G = n_groups(cfg)
+    blocks = {f"p{i}": stack_defs(_pos_defs(cfg, mx, ml), G)
+              for i, (mx, ml) in enumerate(pat)}
+    defs = {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "hidden"), std=std),
+        "final_norm": ParamDef((cfg.d_model,), ("hidden",), init="zeros"),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.padded_vocab), ("hidden", "vocab"), std=std)
+    return defs
+
+
+# ---------------- caches ----------------
+
+def cache_specs(cfg, batch: int, s_max: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree mirroring the decode cache (per pattern position)."""
+    G = n_groups(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def stackg(tree):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((G,) + s.shape, s.dtype), tree)
+
+    out = {}
+    for i, (mx, ml) in enumerate(layer_pattern(cfg)):
+        c = {}
+        if mx == "attn":
+            c["k"] = jax.ShapeDtypeStruct((batch, s_max, KV, hd), dtype)
+            c["v"] = jax.ShapeDtypeStruct((batch, s_max, KV, hd), dtype)
+        elif mx == "mamba":
+            c.update(mb.mamba_state_defs(cfg, batch, dtype))
+        elif mx == "rwkv":
+            r = rk.rwkv_state_defs(cfg, batch, dtype)
+            c["tm"] = r["tm"]
+            c["cm"] = r["cm"]
+        out[f"p{i}"] = stackg(c)
+    return out
+
+
+def init_cache(cfg, batch, s_max, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  cache_specs(cfg, batch, s_max, dtype))
+
+
+def cache_pspecs(cfg, batch, s_max, rules):
+    """PartitionSpecs for the cache: kv-heads on model, long seq on data (SP)."""
+    from jax.sharding import PartitionSpec as P
+
+    def one(path_sds):
+        sds = path_sds
+        shp = sds.shape
+        if len(shp) == 5:  # (G, B, S, KV, hd) attention cache
+            kv_ax = rules.resolve("kv_heads", shp[3])
+            hd_ax = rules.resolve("kv_head_dim", shp[4])  # model iff kv failed
+            b_ax = rules.resolve("batch", shp[1])
+            s_ax = None
+            if b_ax is None or (shp[1] % max(rules._axis_size(b_ax), 1)) != 0:
+                b_ax = None
+            if shp[1] == 1:  # long-context single-request: shard sequence (SP)
+                b_ax = None
+                s_ax = rules.resolve("seq_sp", shp[2])
+            return P(None, b_ax, s_ax, kv_ax, hd_ax)
+        # states: shard batch dim (axis 1) when divisible
+        if len(shp) >= 2:
+            b_ax = rules.resolve("batch", shp[1])
+            return P(None, b_ax, *([None] * (len(shp) - 2)))
+        return P()
+    return jax.tree_util.tree_map(one, cache_specs(cfg, batch, s_max))
+
+
+# ---------------- forward ----------------
+
+def _rope_sc(cfg, positions):
+    if cfg.rope_theta <= 0:
+        return None
+    return L.rope_tables(positions, cfg.resolved_head_dim, cfg.rope_theta)
+
+
+def _block_seq(cfg, pat, params_g, x, rope_sc, cache_g, mode, use_flash):
+    """Apply one pattern group (P sub-layers) over a full sequence.
+
+    cache_g: per-position cache slice (no G axis) or None (train).
+    Returns (x, new_cache_g, aux)."""
+    aux = {"moe_aux": 0.0, "moe_z": 0.0}
+    new_cache = {}
+    # multi-sublayer groups (jamba P=8) remat each sublayer too, so the
+    # group's backward holds one sublayer's recompute at a time
+    inner_ckpt = mode == "train" and len(pat) > 1
+
+    def one(x, p, mx, ml):
+        nc = {}
+        a = {"moe_aux": 0.0, "moe_z": 0.0}
+        # NOTE(perf log): a "gather the residual once per sublayer" variant
+        # (tag spv2) was measured and REVERTED: XLA already CSEs the twin
+        # SP gathers, so it only cut collectives 11% while materializing
+        # replicated residuals (+14 GiB temp). See EXPERIMENTS.md §Perf.
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if mx == "attn":
+            y, (k, v) = attn.attn_apply(p["mixer"], cfg, h, rope_sc,
+                                        causal=True, use_flash=use_flash)
+            if mode == "prefill":
+                nc["k"], nc["v"] = k, v
+        elif mx == "mamba":
+            y, st = mb.mamba_seq(p["mixer"], cfg, h)
+            if mode == "prefill":
+                nc.update(st)
+        else:  # rwkv
+            B = x.shape[0]
+            zeros = {"last_x": jnp.zeros((B, cfg.d_model), x.dtype),
+                     "wkv": jnp.zeros((B, cfg.n_heads, cfg.resolved_head_dim,
+                                       cfg.resolved_head_dim), jnp.float32)}
+            y, st = rk.time_mix_seq(p["mixer"], cfg, h, zeros)
+            if mode == "prefill":
+                nc["tm"] = st
+        x = x + y
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if ml == "dense":
+            y = L.mlp_apply(p["mlp"], h, cfg.act)
+        elif ml == "moe":
+            y, a2 = moe_mod.moe_apply(p["mlp"], cfg, h)
+            a = {k2: a[k2] + a2[k2] for k2 in a}
+        else:  # rwkv channel mix
+            B = x.shape[0]
+            y, st = rk.channel_mix(p["cm"], cfg, h,
+                                   {"last_x": jnp.zeros((B, cfg.d_model), x.dtype)})
+            if mode == "prefill":
+                nc["cm"] = st
+        x = x + y
+        x = shard(x, "batch", "seq_res", "hidden")
+        return x, nc, a
+
+    for i, (mx, ml) in enumerate(pat):
+        p = params_g[f"p{i}"]
+        c = cache_g[f"p{i}"] if cache_g is not None else None
+        fn = one
+        if inner_ckpt:
+            fn = jax.checkpoint(lambda x, p, mx=mx, ml=ml: one(x, p, mx, ml),
+                                prevent_cse=False, static_argnums=())
+            x, nc, a = fn(x, p)
+        else:
+            x, nc, a = one(x, p, mx, ml)
+        aux = {k2: aux[k2] + a[k2] for k2 in aux}
+        if mode == "prefill" and c is not None:
+            nc = jax.tree_util.tree_map(lambda t, n: n.astype(t.dtype), c, nc)
+        new_cache[f"p{i}"] = nc
+    return x, (new_cache if mode == "prefill" else None), aux
+
+
+def _block_decode(cfg, pat, params_g, x, rope_sc, cache_g, pos):
+    """One pattern group, single-token decode. Returns (x, new_cache_g)."""
+    new_cache = {}
+    for i, (mx, ml) in enumerate(pat):
+        p = params_g[f"p{i}"]
+        c = cache_g[f"p{i}"]
+        nc = {}
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if mx == "attn":
+            y, (k, v) = attn.attn_decode(p["mixer"], cfg, h, rope_sc, c["k"], c["v"], pos)
+            nc["k"], nc["v"] = k, v
+        elif mx == "mamba":
+            y, st = mb.mamba_decode(p["mixer"], cfg, h, c)
+            nc.update(st)
+        else:  # rwkv
+            y, st = rk.time_mix_decode(p["mixer"], cfg, h, c["tm"])
+            nc["tm"] = st
+        x = x + y
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if ml == "dense":
+            y = L.mlp_apply(p["mlp"], h, cfg.act)
+        elif ml == "moe":
+            y, _ = moe_mod.moe_apply(p["mlp"], cfg, h)
+        else:
+            y, st = rk.channel_mix(p["cm"], cfg, h, c["cm"])
+            nc["cm"] = st
+        x = x + y
+        new_cache[f"p{i}"] = nc
+    return x, new_cache
+
+
+def forward_train(params, cfg, x, positions, remat=True, use_flash=False):
+    """x: [B,S,d] embedded input. Returns (hidden, aux)."""
+    pat = layer_pattern(cfg)
+    rope_sc = _rope_sc(cfg, positions)
+
+    def body(carry, params_g):
+        x, am, az = carry
+        x, _, aux = _block_seq(cfg, pat, params_g, x, rope_sc, None, "train", use_flash)
+        return (x, am + aux["moe_aux"], az + aux["moe_z"]), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=True)
+    (x, am, az), _ = jax.lax.scan(body, (x, 0.0, 0.0), params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, {"moe_aux": am, "moe_z": az}
+
+
+def forward_prefill(params, cfg, x, positions, s_max, cache_dtype=jnp.bfloat16,
+                    use_flash=False):
+    """Returns (hidden, cache). Prompt length must equal s_max for attn cache."""
+    pat = layer_pattern(cfg)
+    rope_sc = _rope_sc(cfg, positions)
+    G = n_groups(cfg)
+    cache_tmpl = init_cache(cfg, x.shape[0], s_max, cache_dtype)
+
+    def body(x, xs):
+        params_g, cache_g = xs
+        x, nc, _ = _block_seq(cfg, pat, params_g, x, rope_sc, cache_g, "prefill", use_flash)
+        # conform returned states to the cache template dtypes
+        merged = jax.tree_util.tree_map(lambda t, n: n.astype(t.dtype), cache_g, nc)
+        return x, merged
+
+    x, cache = jax.lax.scan(body, x, (params["blocks"], cache_tmpl))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, cache
+
+
+def forward_decode(params, cfg, x, pos, cache):
+    """x: [B,1,d]; pos: scalar int32. Returns (hidden, new_cache).
+
+    The cache rides the scan *carry* (updated in place per group) rather
+    than xs/ys, so XLA keeps a single buffer instead of input+output
+    copies — at 32k-context decode that halves cache residency."""
+    pat = layer_pattern(cfg)
+    rope_sc = _rope_sc(cfg, pos[None]) if cfg.rope_theta > 0 else None
+
+    def body(carry, params_g):
+        x, cache, g = carry
+        cache_g = jax.tree_util.tree_map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, g, 0, keepdims=False), cache)
+        x, nc = _block_decode(cfg, pat, params_g, x, rope_sc, cache_g, pos)
+        cache = jax.tree_util.tree_map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), g, 0), cache, nc)
+        return (x, cache, g + 1), None
+
+    (x, new_cache, _), _ = jax.lax.scan(
+        body, (x, cache, jnp.int32(0)), params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache
+
+
+def logits_from_hidden(params, cfg, x):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    eq = "bsd,vd->bsv" if cfg.tie_embeddings else "bsd,dv->bsv"
+    logits = jnp.einsum(eq, x, table)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def embed_tokens(params, cfg, tokens):
+    x = L.embed_apply(params["embed"], tokens)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x

@@ -1,0 +1,127 @@
+"""Serve engine: prefill + decode with KV cache, continuous batching,
+RowClone-backed page forks, and request-level straggler timeouts.
+
+The engine drives the model zoo's pure ``prefill_fn``/``decode_fn``.
+``fork_request`` duplicates a finished prompt's KV pages for N
+continuations — the serving-side bulk-copy the RowClone case study
+models (``kernels.rowclone_copy`` is its on-TPU analogue; the emulator's
+``kv_fork_trace`` its DRAM-level cost model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pad_cache_to(cache, s_max: int):
+    """Pad attention-cache leaves (G,B,S,KV,hd) out to s_max along S.
+
+    Only k/v-named leaves are touched — recurrent states (mamba conv/h,
+    rwkv wkv) keep their shapes."""
+    def one(path, x):
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("k", "v", "self_k", "self_v") and x.ndim == 5 \
+                and x.shape[2] < s_max:
+            pad = [(0, 0)] * 5
+            pad[2] = (0, s_max - x.shape[2])
+            return jnp.pad(x, pad)
+        return x
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    started: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, model, params, s_max: int, straggler_timeout_s: float = 30.0):
+        self.model = model
+        self.params = params
+        self.s_max = s_max
+        self.timeout = straggler_timeout_s
+        self._prefill = jax.jit(model.prefill_fn)
+        self._decode = jax.jit(model.decode_fn)
+        self.timeouts = 0
+
+    def generate(self, prompt: np.ndarray, max_new: int, greedy=True) -> List[int]:
+        """Single-request generation (batch dim 1)."""
+        B = 1
+        batch = {"tokens": jnp.asarray(prompt[None, :])}
+        if self.model.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (B, self.model.cfg.n_patches, self.model.cfg.d_model), jnp.float32)
+        if self.model.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (B, self.model.cfg.n_frames, self.model.cfg.d_model), jnp.float32)
+        logits, cache = self._prefill(self.params, batch)
+        cache = pad_cache_to(cache, self.s_max)
+        pos = prompt.shape[-1]
+        tok = jnp.argmax(logits[:, -1, :self.model.cfg.vocab_size], -1)[:, None]
+        out = [int(tok[0, 0])]
+        t0 = time.perf_counter()
+        for _ in range(max_new - 1):
+            if time.perf_counter() - t0 > self.timeout:
+                self.timeouts += 1   # straggler mitigation: give up the tail
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         tok.astype(jnp.int32), jnp.int32(pos))
+            tok = jnp.argmax(logits[:, -1, :self.model.cfg.vocab_size], -1)[:, None]
+            out.append(int(tok[0, 0]))
+            pos += 1
+        return out
+
+    def _modality_stubs(self, batch, B):
+        if self.model.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (B, self.model.cfg.n_patches, self.model.cfg.d_model), jnp.float32)
+        if self.model.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (B, self.model.cfg.n_frames, self.model.cfg.d_model), jnp.float32)
+        return batch
+
+    def generate_batch(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        """Batched generation, all prompts same length (continuous batch)."""
+        B, S0 = prompts.shape
+        batch = self._modality_stubs({"tokens": jnp.asarray(prompts)}, B)
+        logits, cache = self._prefill(self.params, batch)
+        cache = pad_cache_to(cache, self.s_max)
+        pos = S0
+        tok = jnp.argmax(logits[:, -1, :self.model.cfg.vocab_size], -1)[:, None]
+        outs = [np.asarray(tok)[:, 0]]
+        for _ in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         tok.astype(jnp.int32), jnp.int32(pos))
+            tok = jnp.argmax(logits[:, -1, :self.model.cfg.vocab_size], -1)[:, None]
+            outs.append(np.asarray(tok)[:, 0])
+            pos += 1
+        return np.stack(outs, axis=1)  # [B, max_new]
+
+    def fork_cache(self, cache, n: int, use_kernel: bool = False):
+        """Duplicate a batch-1 cache into n continuations (beam/prefix fork).
+
+        With ``use_kernel`` the copy goes through the rowclone_copy Pallas
+        kernel (interpret mode on CPU) — the TPU analogue of in-DRAM copy."""
+        def one(x):
+            if x.ndim >= 2 and x.shape[1] == 1:
+                reps = [1] * x.ndim
+                reps[1] = n
+                if use_kernel and x.ndim == 5:
+                    from repro.kernels import ops as kops
+                    flat = x.reshape(x.shape[0], -1)
+                    copies = [kops.rowclone_copy(flat).reshape(x.shape)
+                              for _ in range(n)]
+                    return jnp.concatenate(copies, axis=1)
+                return jnp.tile(x, reps)
+            return x
+        return jax.tree_util.tree_map(one, cache)

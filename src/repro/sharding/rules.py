@@ -1,0 +1,129 @@
+"""Logical-axis -> mesh-axis rules with divisibility-aware fallbacks.
+
+The resolver is the single place where "how does this arch shard on this
+mesh" is decided. Models annotate params/activations with *logical* names
+("batch", "heads", "ffn", ...); launchers build a :class:`Rules` for the
+(arch, mesh) pair; every annotation goes through :meth:`Rules.resolve`,
+which falls back to replication when the dim is not divisible by the mesh
+axis. The chosen layout is recorded so dry-run artifacts can report it.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# preference order per logical axis: first divisible candidate wins
+DEFAULT_PREFS: Dict[str, Tuple[Axis, ...]] = {
+    "batch":    (("pod", "data"), ("data",)),
+    "seq":      (None,),                 # sequence replicated by default (SP opts in)
+    "seq_res":  (("model",), None),      # residual-stream sequence parallelism (SP)
+    "seq_sp":   (("data",), None),       # long-context KV/sequence sharding
+    "hidden":   (None,),                 # residual stream replicated across model
+    "hidden_tp": (("model",), None),     # TP'd hidden (qkv/ffn matmul output rows)
+    "heads":    (("model",), None),
+    "kv_heads": (("model",), None),
+    # head_dim shards on model ONLY when the matching heads axis could not
+    # (e.g. llava's 56 heads or GQA kv=2 on a 16-way axis) — see resolve()
+    "head_dim": (None,),
+    "kv_head_dim": (None,),
+    "ffn":      (("model",), None),
+    "vocab":    (("model",), None),
+    "experts":  (("model",), None),
+    "d_state":  (None,),
+    "layers":   (None,),
+}
+
+
+class Rules:
+    def __init__(self, mesh: Mesh, prefs: Optional[Dict[str, Tuple[Axis, ...]]] = None):
+        self.mesh = mesh
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.prefs = dict(DEFAULT_PREFS)
+        if prefs:
+            self.prefs.update(prefs)
+        self.decisions: Dict[Tuple[str, int], Axis] = {}
+
+    def _axis_size(self, ax: Axis) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, str):
+            ax = (ax,)
+        n = 1
+        for a in ax:
+            n *= self.axis_sizes.get(a, 1)
+        return n
+
+    def _present(self, ax: Axis) -> Axis:
+        """Drop mesh axes that don't exist on this mesh (e.g. 'pod' single-pod)."""
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            return ax if ax in self.axis_sizes else None
+        kept = tuple(a for a in ax if a in self.axis_sizes)
+        return kept if kept else None
+
+    def _heads_failed(self, kind: str) -> bool:
+        dec = [v for (k, _), v in self.decisions.items() if k == kind]
+        return bool(dec) and all(v is None for v in dec)
+
+    def resolve(self, logical: Optional[str], size: int) -> Axis:
+        if logical is None:
+            return None
+        prefs = self.prefs.get(logical, (None,))
+        if logical == "head_dim" and self._heads_failed("heads"):
+            prefs = (("model",), None)
+        if logical == "kv_head_dim" and self._heads_failed("kv_heads"):
+            prefs = (("model",), None)
+        for cand in prefs:
+            cand = self._present(cand)
+            n = self._axis_size(cand)
+            if n == 1 and cand is not None:
+                cand = None
+            if size % max(n, 1) == 0:
+                self.decisions[(logical, size)] = cand
+                return cand
+        self.decisions[(logical, size)] = None
+        return None
+
+    def spec(self, *logical_and_size) -> P:
+        """rules.spec(('batch', b), ('seq', s), ('hidden', d)) -> PartitionSpec."""
+        axes = [self.resolve(n, s) for (n, s) in logical_and_size]
+        used = set()
+        out = []
+        for ax in axes:
+            flat = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+            if any(a in used for a in flat):
+                ax = None
+            used.update(flat)
+            out.append(ax)
+        return P(*out)
+
+    def layout_report(self) -> Dict[str, str]:
+        return {f"{k[0]}[{k[1]}]": str(v) for k, v in sorted(self.decisions.items())}
+
+
+# ---- thread-local active rules so model code can annotate activations ----
+_tls = threading.local()
+
+
+def set_rules(rules: Optional[Rules]):
+    _tls.rules = rules
+
+
+def get_rules() -> Optional[Rules]:
+    return getattr(_tls, "rules", None)
+
+
+def shard(x, *logical):
+    """Constrain activation x to the active rules (no-op outside a mesh)."""
+    r = get_rules()
+    if r is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = r.spec(*[(n, s) for n, s in zip(logical, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))

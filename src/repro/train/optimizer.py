@@ -1,0 +1,124 @@
+"""AdamW with ZeRO-1 sharded states + mixed-precision master weights.
+
+Optimizer states (fp32 master, m, v) are sharded over the *data* axis on
+top of the param's TP spec (ZeRO-1): ``zero1_pspecs`` picks the largest
+still-unsharded, divisible dim. The compute copy of the params is bf16
+with the TP-natural spec — the cast + resharding is where the per-step
+all-gather happens, and the gradient constraint is the reduce-scatter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import pdefs
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    master: Any
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup) / jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def zero1_pspecs(defs, rules):
+    """Param spec + extra 'data' sharding on the largest free divisible dim."""
+    base = pdefs.pspec_tree(defs, rules.resolve)
+    data_size = rules._axis_size(rules._present(("data",)))
+
+    def widen(d: pdefs.ParamDef, spec: P):
+        axes = list(spec) + [None] * (len(d.shape) - len(spec))
+        used = set()
+        for a in axes:
+            used.update(a if isinstance(a, tuple) else (a,) if a else ())
+        if "data" in used or data_size <= 1:
+            return spec
+        cands = [(d.shape[i], i) for i in range(len(axes))
+                 if axes[i] is None and d.shape[i] % data_size == 0 and d.shape[i] > 1]
+        if not cands:
+            return spec
+        _, i = max(cands)
+        axes[i] = "data"
+        while axes and axes[-1] is None:
+            axes.pop()
+        return P(*axes)
+
+    return jax.tree_util.tree_map(widen, defs, base, is_leaf=pdefs.is_def)
+
+
+def init_state(params_fp32) -> AdamWState:
+    zeros = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, jnp.float32), params_fp32)
+    return AdamWState(step=jnp.zeros((), jnp.int32), master=params_fp32,
+                      m=zeros, v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def abstract_state(defs) -> AdamWState:
+    t = pdefs.abstract_tree(defs, jnp.float32)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), master=t, m=t, v=t)
+
+
+def state_pspecs(defs, rules) -> AdamWState:
+    z = zero1_pspecs(defs, rules)
+    return AdamWState(step=P(), master=z, m=z, v=z)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_update(cfg: AdamWConfig, state: AdamWState, grads) -> tuple:
+    """grads: fp32, same sharding as master. Returns (new_state, metrics)."""
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return p, m, v
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    flat_p = jax.tree_util.tree_leaves(state.master)
+    new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [n[0] for n in new])
+    new_m = jax.tree_util.tree_unflatten(tdef, [n[1] for n in new])
+    new_v = jax.tree_util.tree_unflatten(tdef, [n[2] for n in new])
+    return (AdamWState(step=step, master=new_p, m=new_m, v=new_v),
+            {"grad_norm": gn, "lr": lr})

@@ -1,0 +1,59 @@
+"""Parse collective traffic out of (partitioned) HLO text.
+
+``compiled.as_text()`` for a pjit'd program is the SPMD single-program
+module, so shapes on collective ops are *per-device*. We sum operand
+bytes per collective kind; the roofline collective term is then
+per-device bytes / link bandwidth.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %all-gather.5 = bf16[16,4096,256]{2,1,0} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<dtype>\w+)\[(?P<dims>[\d,]*)\][^ ]*)\s+"
+    r"(?P<kind>" + "|".join(COLLECTIVES) + r")(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {kind: {"bytes": per-device operand bytes, "count": n}}."""
+    out = {k: {"bytes": 0, "count": 0} for k in COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        # async pairs appear as -start/-done; count once (on start)
+        if f"{kind}-done(" in line:
+            continue
+        # result bytes: sum every shape on the lhs (tuples for grouped ops)
+        lhs = line.split(f" {kind}", 1)[0]
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(lhs))
+        out[kind]["bytes"] += nbytes
+        out[kind]["count"] += 1
+    return out
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in collective_bytes(hlo_text).values()))

@@ -1,0 +1,20 @@
+import warnings
+
+import pytest
+
+warnings.filterwarnings("ignore", category=RuntimeWarning)
+
+
+def tiny_cfg(name, **over):
+    from repro.configs import get_config
+    cfg = get_config(name)
+    base = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                vocab_size=512, head_dim=16)
+    base.update(over)
+    return cfg.scaled(**base)
+
+
+@pytest.fixture
+def rng():
+    import jax
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,142 @@
+"""EasyDRAM engine behaviour: time-scaling validation (Sec. 6), causality,
+scheduler policy effects, DRAM timing invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import dram, emulator
+from repro.core.emulator import BIG, Trace, run
+from repro.core.timescale import JETSON_NANO, PIDRAM_LIKE, SystemConfig
+
+
+def chase(n=500, seed=0, banks=16, rows=4096):
+    rng = np.random.RandomState(seed)
+    return Trace.of(kind=np.zeros(n), bank=rng.randint(0, banks, n),
+                    row=rng.randint(0, rows, n),
+                    delta=np.full(n, 4), dep=np.ones(n))
+
+
+def stream(n=500, delta=4):
+    i = np.arange(n)
+    return Trace.of(kind=np.zeros(n), bank=i % 16, row=(i // 16) % 4096,
+                    delta=np.full(n, delta))
+
+
+class TestTimeScalingValidation:
+    """The paper's Sec. 6 claim: time-scaled execution time matches the
+    reference system (HW MC at the modeled clock) to <0.1%; here the
+    engine is deterministic so the match is exact, and the substantive
+    assertions are the invariances behind the claim."""
+
+    def test_ts_equals_reference(self):
+        for tr in (chase(), stream()):
+            a = run(tr, JETSON_NANO, "ts")
+            b = run(tr, JETSON_NANO, "reference")
+            assert int(a["exec_cycles"]) == int(b["exec_cycles"])
+
+    def test_ts_invariant_to_fpga_clocks(self):
+        tr = chase()
+        base = None
+        for smc in (50, 400, 3000, 20000):
+            for fmc in (50.0, 100.0, 200.0):
+                sysc = dataclasses.replace(JETSON_NANO,
+                                           smc_cycles_per_decision=smc,
+                                           f_mc_fpga_mhz=fmc)
+                e = int(run(tr, sysc, "ts")["exec_cycles"])
+                base = base or e
+                assert e == base, (smc, fmc)
+
+    def test_nots_depends_on_smc_speed(self):
+        tr = chase()
+        slow = int(run(dataclasses.replace(JETSON_NANO, smc_cycles_per_decision=4000),
+                       tr and tr, "nots")["exec_cycles"]) \
+            if False else int(run(tr, dataclasses.replace(
+                JETSON_NANO, smc_cycles_per_decision=4000), "nots")["exec_cycles"])
+        fast = int(run(tr, dataclasses.replace(
+            JETSON_NANO, smc_cycles_per_decision=50), "nots")["exec_cycles"])
+        assert slow > 1.5 * fast
+
+    def test_validation_error_band(self):
+        """Headline number: avg + max error across the workload suite."""
+        errs = []
+        for seed in range(6):
+            tr = chase(300, seed)
+            a = int(run(tr, JETSON_NANO, "ts")["exec_cycles"])
+            b = int(run(tr, JETSON_NANO, "reference")["exec_cycles"])
+            errs.append(abs(a - b) / b)
+        assert np.mean(errs) < 1e-3 and np.max(errs) < 1e-2  # paper: <0.1% / <1%
+
+
+class TestEngineInvariants:
+    def test_causality_and_completion(self):
+        tr = chase(400, 3)
+        r = run(tr, JETSON_NANO, "ts")
+        assert int(r["served"]) == tr.n
+        resp, iss = r["t_resp"][:tr.n], r["t_issue"][:tr.n]
+        assert (resp < int(BIG)).all()
+        assert (resp > iss).all()
+
+    def test_dependent_slower_than_independent(self):
+        dep = chase(400)
+        ind = Trace.of(dep.kind, dep.bank, dep.row, dep.delta)  # dep=0
+        a = int(run(dep, JETSON_NANO, "ts")["exec_cycles"])
+        b = int(run(ind, JETSON_NANO, "ts")["exec_cycles"])
+        assert a > b
+
+    def test_row_hits_speed_up(self):
+        same_row = Trace.of(np.zeros(400), np.zeros(400), np.zeros(400),
+                            np.full(400, 2))
+        diff_row = Trace.of(np.zeros(400), np.zeros(400),
+                            np.arange(400) % 4096, np.full(400, 2))
+        a = run(same_row, JETSON_NANO, "ts")
+        b = run(diff_row, JETSON_NANO, "ts")
+        assert int(a["row_hits"]) > int(b["row_hits"])
+        assert int(a["exec_cycles"]) < int(b["exec_cycles"])
+
+    def test_frfcfs_beats_fcfs_on_mixed_traffic(self):
+        rng = np.random.RandomState(1)
+        n = 600
+        row = np.where(rng.rand(n) < 0.7, 7, rng.randint(0, 4096, n))
+        tr = Trace.of(np.zeros(n), np.zeros(n), row, np.full(n, 1))
+        fr = run(tr, JETSON_NANO, "ts")
+        fc = run(tr, dataclasses.replace(JETSON_NANO, scheduler="fcfs"), "ts")
+        assert int(fr["exec_cycles"]) <= int(fc["exec_cycles"])
+        assert int(fr["row_hits"]) >= int(fc["row_hits"])
+
+    def test_trace_padding_neutral(self):
+        tr = chase(300)
+        a = int(run(tr, JETSON_NANO, "ts")["exec_cycles"])
+        b = int(run(emulator.pad_trace(tr, 1024), JETSON_NANO, "ts")["exec_cycles"])
+        assert a == b
+
+
+class TestDramTimings:
+    def test_row_miss_slower_than_hit(self):
+        t = dram.Timing()
+        bs = dram.init_bank_state(dram.Geometry())
+        bs, t1, hit1 = dram.service_request(bs, t, dram.READ, 0, 5, 0, t.tRCD)
+        assert not bool(hit1)
+        bs, t2, hit2 = dram.service_request(bs, t, dram.READ, 0, 5, int(t1), t.tRCD)
+        assert bool(hit2)
+        assert int(t2) - int(t1) < int(t1)
+
+    def test_reduced_trcd_faster(self):
+        t = dram.Timing()
+        g = dram.Geometry()
+        b1, d1, _ = dram.service_request(dram.init_bank_state(g), t, dram.READ,
+                                         0, 5, 0, t.tRCD)
+        b2, d2, _ = dram.service_request(dram.init_bank_state(g), t, dram.READ,
+                                         0, 5, 0, t.tRCD_reduced)
+        assert int(d2) == int(d1) - (t.tRCD - t.tRCD_reduced)
+
+    def test_banks_pipeline(self):
+        """Streaming across banks must beat hammering one bank."""
+        n = 256
+        multi = Trace.of(np.zeros(n), np.arange(n) % 16, (np.arange(n) // 16) % 4096,
+                         np.full(n, 1))
+        single = Trace.of(np.zeros(n), np.zeros(n), np.arange(n) % 4096,
+                          np.full(n, 1))
+        a = int(run(multi, JETSON_NANO, "ts")["exec_cycles"])
+        b = int(run(single, JETSON_NANO, "ts")["exec_cycles"])
+        assert a < b

@@ -1,0 +1,66 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bloom import BloomFilter
+from repro.core.emulator import BIG, Trace, run
+from repro.core.timescale import JETSON_NANO
+from repro.sharding.rules import Rules
+from repro.launch.mesh import make_production_mesh
+
+_MESH = None
+
+
+def _mesh():
+    global _MESH
+    if _MESH is None:
+        import jax
+        n = len(jax.devices())
+        _MESH = jax.make_mesh((1, n), ("data", "model"))
+    return _MESH
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=500))
+def test_bloom_never_false_negative(keys):
+    keys = np.asarray(keys, np.uint32)
+    bf = BloomFilter.build(keys, m_bits=1 << 14, k=3)
+    assert bf.contains(keys).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 64), st.integers(1, 8))
+def test_emulator_causality_random_traces(seed, n, window):
+    rng = np.random.RandomState(seed % (2 ** 31))
+    tr = Trace.of(kind=rng.randint(0, 2, n), bank=rng.randint(0, 16, n),
+                  row=rng.randint(0, 4096, n), delta=rng.randint(0, 32, n),
+                  dep=rng.randint(0, 2, n))
+    import dataclasses
+    r = run(tr, dataclasses.replace(JETSON_NANO, window=window), "ts")
+    assert int(r["served"]) == n                      # everything completes
+    assert (r["t_resp"][:n] < int(BIG)).all()
+    assert (r["t_resp"][:n] > r["t_issue"][:n]).all()  # causality
+    # issue times are monotone (in-order front end)
+    assert (np.diff(r["t_issue"][:n]) >= 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(["batch", "heads", "kv_heads", "ffn", "vocab", "experts"]),
+       st.integers(1, 4096))
+def test_rules_divisibility_never_violated(logical, size):
+    rules = Rules(_mesh())
+    ax = rules.resolve(logical, size)
+    n = rules._axis_size(ax)
+    assert size % max(n, 1) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_emulator_deterministic(seed):
+    rng = np.random.RandomState(seed)
+    n = 64
+    tr = Trace.of(kind=np.zeros(n), bank=rng.randint(0, 16, n),
+                  row=rng.randint(0, 4096, n), delta=np.full(n, 3))
+    a = int(run(tr, JETSON_NANO, "ts")["exec_cycles"])
+    b = int(run(tr, JETSON_NANO, "ts")["exec_cycles"])
+    assert a == b

@@ -1,0 +1,125 @@
+"""End-to-end behaviour: train -> checkpoint -> serve on one model, the
+serve engine's fork path, subprocess dry-run, and pipeline parallelism."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SSMConfig
+from repro.data.pipeline import ShardedLoader, SyntheticLM
+from repro.models import model_zoo
+from repro.serve.engine import ServeEngine
+from repro.train import optimizer as opt
+from repro.train.trainer import Trainer
+from tests.conftest import tiny_cfg
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_train_then_serve_end_to_end(tmp_path):
+    cfg = tiny_cfg("qwen3_8b", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                   d_ff=64, vocab_size=64, head_dim=16)
+    model = model_zoo.build(cfg, s_max=24)
+    src = SyntheticLM(cfg.vocab_size, 16, 8, seed=9, n_patterns=4)
+    tr = Trainer(model, opt.AdamWConfig(lr=5e-3, warmup=5, total_steps=200))
+    state = tr.init_state()
+    state, hist = tr.run(state, iter(ShardedLoader(src)), steps=40, log_every=0)
+    assert hist[-1] < hist[0]
+
+    params = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), state.master)
+    eng = ServeEngine(model, params, s_max=24)
+    prompt = np.asarray(src.batch(0)["tokens"])[0, :8]
+    out = eng.generate(prompt, max_new=8)
+    assert len(out) == 8 and all(0 <= t < cfg.vocab_size for t in out)
+
+    outs = eng.generate_batch(np.asarray(src.batch(1)["tokens"])[:4, :8], 6)
+    assert outs.shape == (4, 6)
+
+
+def test_serve_fork_kernel_matches_tile():
+    cfg = tiny_cfg("qwen3_8b", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                   d_ff=64, vocab_size=64, head_dim=16)
+    model = model_zoo.build(cfg, s_max=16)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, s_max=16)
+    _, cache = model.prefill_fn(params, {"tokens": jnp.ones((1, 16), jnp.int32)})
+    f1 = eng.fork_cache(cache, 3, use_kernel=False)
+    f2 = eng.fork_cache(cache, 3, use_kernel=True)
+    for a, b in zip(jax.tree_util.tree_leaves(f1), jax.tree_util.tree_leaves(f2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dryrun_subprocess_cell():
+    """Deliverable (e): lower+compile a full-size cell on the production
+    mesh inside a clean interpreter (512 host devices)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper_base",
+         "--shape", "decode_32k", "--force"],
+        capture_output=True, text=True, timeout=520, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "[ok]" in r.stdout
+
+
+def test_pipeline_parallel_subprocess():
+    """PP over 4 host devices == sequential stack (exactness)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.pipeline import pipeline_apply, sequential_apply
+mesh = jax.make_mesh((4,), ("pod",))
+S, M, mb, d = 4, 8, 2, 16
+k = jax.random.PRNGKey(0)
+params = {"w": jax.random.normal(k, (S, d, d)) * 0.3}
+x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
+stage = lambda p, x: jnp.tanh(x @ p["w"])
+a = pipeline_apply(params, x, stage, mesh, axis="pod")
+b = sequential_apply(params, x, stage)
+np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+print("PIPELINE_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300, env=env)
+    assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr[-2000:]
+
+
+def test_elastic_remesh_subprocess():
+    """Node-loss drill: reshard ZeRO-1 state from 8 -> 4 devices."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models import model_zoo
+from repro.sharding.rules import Rules
+from repro.distributed.elastic import remesh_state, healthy_mesh
+from repro.train import optimizer as opt
+from jax.sharding import NamedSharding
+
+cfg = get_config("qwen2_1_5b").scaled(n_layers=2, d_model=64, n_heads=4,
+                                      n_kv_heads=2, d_ff=128, vocab_size=512,
+                                      head_dim=16)
+model = model_zoo.build(cfg, s_max=16)
+mesh8 = healthy_mesh(8, model_parallel=2)
+rules8 = Rules(mesh8)
+specs = opt.state_pspecs(model.defs, rules8)
+state = opt.init_state(model.init(jax.random.PRNGKey(0)))
+state = jax.tree_util.tree_map(
+    lambda x, s: jax.device_put(x, NamedSharding(mesh8, s)), state, specs)
+before = np.asarray(jax.tree_util.tree_leaves(state.master)[0])
+mesh4 = healthy_mesh(4, model_parallel=2)   # two nodes died
+state4, _ = remesh_state(state, model, mesh4)
+after = np.asarray(jax.tree_util.tree_leaves(state4.master)[0])
+np.testing.assert_array_equal(before, after)
+print("ELASTIC_OK")
+"""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300, env=env)
+    assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr[-2000:]

@@ -1,0 +1,82 @@
+"""RowClone + tRCD-reduction technique behaviour (Secs. 7-8)."""
+import numpy as np
+import pytest
+
+from repro.core import traces
+from repro.core.dram import Geometry, RC_COPY, RC_INIT
+from repro.core.profiling import DeviceModel
+from repro.core.techniques import RowClone, TRCDReduction
+from repro.core.timescale import JETSON_NANO, PIDRAM_LIKE
+
+
+@pytest.fixture(scope="module")
+def device():
+    return DeviceModel(Geometry())
+
+
+class TestDeviceModel:
+    def test_weak_fraction_matches_paper(self, device):
+        # Fig. 12: 84.5% strong / 15.5% weak
+        assert abs(device.weak_fraction() - 0.155) < 0.01
+
+    def test_trcd_all_below_nominal(self, device):
+        assert device.min_trcd_ns.max() < 13.5  # all cells beat the datasheet
+
+    def test_weak_rows_spatially_clustered(self, device):
+        """Autocorrelation of weakness along rows >> iid baseline."""
+        w = device.weak[0].astype(float)
+        ac = np.corrcoef(w[:-1], w[1:])[0, 1]
+        assert ac > 0.2
+
+    def test_clonable_requires_same_subarray(self, device):
+        assert not device.clonable(0, 10, 600)   # crosses subarray boundary
+        assert not device.clonable(0, 10, 10)    # src == dst
+
+    def test_clonable_deterministic(self, device):
+        for args in ((0, 10, 11), (3, 100, 101), (7, 513, 514)):
+            assert device.clonable(*args) == device.clonable(*args)
+
+
+class TestRowClone:
+    def test_allocator_satisfies_constraints(self, device):
+        geo = Geometry()
+        tr, meta = traces.copy_workload(1 << 20, geo, "rowclone", device)
+        assert meta["fallback_rows"] <= meta["rows"] * 0.05
+        assert (np.isin(tr.kind, (RC_COPY,)).sum()
+                == meta["rows"] - meta["fallback_rows"])
+
+    def test_speedup_over_cpu(self, device):
+        rc = RowClone(JETSON_NANO, device)
+        out = rc.evaluate(1 << 20, "copy", "noflush", "ts")
+        assert out["rowclone"].speedup_vs_cpu > 2.0
+
+    def test_clflush_reduces_benefit(self, device):
+        rc = RowClone(JETSON_NANO, device)
+        nf = rc.evaluate(1 << 18, "copy", "noflush", "ts")["rowclone"].speedup_vs_cpu
+        cf = rc.evaluate(1 << 18, "copy", "clflush", "ts")["rowclone"].speedup_vs_cpu
+        assert cf < nf
+
+    def test_nots_inflates_speedup(self, device):
+        """The paper's headline: platforms without time scaling report
+        inflated RowClone benefits."""
+        ts = RowClone(JETSON_NANO, device).evaluate(
+            1 << 20, "copy", "noflush", "ts")["rowclone"].speedup_vs_cpu
+        nots = RowClone(PIDRAM_LIKE, device).evaluate(
+            1 << 20, "copy", "noflush", "nots")["rowclone"].speedup_vs_cpu
+        assert nots > 1.5 * ts
+
+
+class TestTRCD:
+    def test_bloom_safety(self, device):
+        t = TRCDReduction(JETSON_NANO, device)
+        t.characterize()
+        s = t.safety_check()
+        assert s["false_negatives"] == 0          # never unsafe
+        assert s["false_positive_rate"] < 0.05    # rarely pessimistic
+
+    def test_end_to_end_speedup(self, device):
+        t = TRCDReduction(JETSON_NANO, device)
+        tr, _ = traces.polybench_trace(traces.POLYBENCH[3], Geometry(),
+                                       max_accesses=8000)
+        r = t.evaluate_trace(tr)
+        assert 1.0 <= r["speedup"] < 1.25  # single-digit % (paper avg 2.75%)

@@ -1,0 +1,168 @@
+"""Trainer substrate: optimizer, microbatching, checkpoint/restart,
+fault tolerance, data pipeline, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.data.pipeline import ShardedLoader, SyntheticLM
+from repro.distributed.grad_comp import make_ef_compressor, simple_compressor
+from repro.models import model_zoo
+from repro.train import optimizer as opt
+from repro.train.trainer import Trainer, make_train_step
+from tests.conftest import tiny_cfg
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg("qwen2_1_5b", n_layers=2, d_model=32, n_heads=2,
+                   n_kv_heads=2, d_ff=64, vocab_size=128, head_dim=16)
+    model = model_zoo.build(cfg, s_max=16)
+    return cfg, model
+
+
+def test_loss_decreases(setup, tmp_path):
+    cfg, model = setup
+    src = SyntheticLM(cfg.vocab_size, 16, 8, seed=1)
+    tr = Trainer(model, opt.AdamWConfig(lr=1e-2, warmup=5, total_steps=200),
+                 ckpt_dir=str(tmp_path), ckpt_every=20)
+    state = tr.init_state()
+    state, hist = tr.run(state, iter(ShardedLoader(src)), steps=60, log_every=0)
+    assert hist[-1] < hist[0] * 0.85, (hist[0], hist[-1])
+
+
+def test_checkpoint_resume_exact(setup, tmp_path):
+    cfg, model = setup
+    src = SyntheticLM(cfg.vocab_size, 16, 8, seed=2)
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup=2, total_steps=50)
+
+    # run 6 steps straight
+    tr = Trainer(model, ocfg, ckpt_dir=None)
+    s_ref = tr.init_state(seed=3)
+    loader = ShardedLoader(src)
+    s_ref, _ = tr.run(s_ref, iter(loader), steps=6, log_every=0)
+
+    # run 3, checkpoint, "crash", restore, run 3 more with aligned data
+    d = str(tmp_path / "ck")
+    tr2 = Trainer(model, ocfg, ckpt_dir=d, ckpt_every=3)
+    s = tr2.init_state(seed=3)
+    loader2 = ShardedLoader(src)
+    s, _ = tr2.run(s, iter(loader2), steps=3, log_every=0)
+    ckpt.save(d, s, int(s.step))
+    del s  # crash
+
+    restored = ckpt.restore_latest(d)
+    assert restored is not None
+    step0 = restored.pop("__step__")
+    s2 = ckpt.load_into(restored, tr2.init_state(seed=3))
+    loader3 = ShardedLoader(src, start_step=step0)
+    s2, _ = tr2.run(s2, iter(loader3), steps=3, log_every=0)
+
+    for a, b in zip(jax.tree_util.tree_leaves(s_ref.master),
+                    jax.tree_util.tree_leaves(s2.master)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_checkpoint_crash_safety(setup, tmp_path):
+    """A half-written checkpoint (tmp dir) must never be restored."""
+    cfg, model = setup
+    d = str(tmp_path)
+    s = opt.init_state(model.init(jax.random.PRNGKey(0)))
+    ckpt.save(d, s, 5)
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))  # simulated crash
+    assert ckpt.latest_step(d) == 5
+
+
+def test_async_checkpoint(setup, tmp_path):
+    cfg, model = setup
+    s = opt.init_state(model.init(jax.random.PRNGKey(0)))
+    th = ckpt.save(str(tmp_path), s, 1, async_=True)
+    th.join(timeout=30)
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_microbatch_equivalence(setup):
+    """k microbatches must match the monolithic step closely."""
+    cfg, model = setup
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup=1, total_steps=10, clip_norm=1e9)
+    src = SyntheticLM(cfg.vocab_size, 16, 8, seed=4)
+    batch = src.batch(0)
+    s1 = opt.init_state(model.init(jax.random.PRNGKey(1)))
+    s2 = jax.tree_util.tree_map(jnp.copy, s1)
+    step1 = jax.jit(make_train_step(model, ocfg, num_microbatches=1))
+    step2 = jax.jit(make_train_step(model, ocfg, num_microbatches=4))
+    s1, m1 = step1(s1, batch)
+    s2, m2 = step2(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-2)
+    for a, b in zip(jax.tree_util.tree_leaves(s1.master),
+                    jax.tree_util.tree_leaves(s2.master)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-1, atol=2e-3)
+
+
+def test_grad_compression_bounded_error(setup):
+    cfg, model = setup
+    src = SyntheticLM(cfg.vocab_size, 16, 8, seed=5)
+    batch = src.batch(0)
+    params = model.init(jax.random.PRNGKey(2))
+    g = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    gc = simple_compressor(g)
+    for a, b in zip(jax.tree_util.tree_leaves(g), jax.tree_util.tree_leaves(gc)):
+        scale = float(jnp.max(jnp.abs(a))) + 1e-12
+        assert float(jnp.max(jnp.abs(a - b))) <= scale / 127.0 + 1e-9
+
+    compress, init_ef = make_ef_compressor()
+    ef = init_ef(g)
+    total_true = jax.tree_util.tree_map(jnp.zeros_like, g)
+    total_sent = jax.tree_util.tree_map(jnp.zeros_like, g)
+    for _ in range(8):  # error feedback: accumulated update stays unbiased
+        sent, ef = compress(g, ef)
+        total_true = jax.tree_util.tree_map(lambda t, x: t + x, total_true, g)
+        total_sent = jax.tree_util.tree_map(lambda t, x: t + x, total_sent, sent)
+    for t, s, e in zip(jax.tree_util.tree_leaves(total_true),
+                       jax.tree_util.tree_leaves(total_sent),
+                       jax.tree_util.tree_leaves(ef)):
+        np.testing.assert_allclose(np.asarray(t), np.asarray(s + e), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_straggler_hook_fires(setup):
+    cfg, model = setup
+    events = []
+    src = SyntheticLM(cfg.vocab_size, 16, 8, seed=6)
+
+    class SlowLoader:
+        def __init__(self):
+            self.it, self.n = iter(ShardedLoader(src)), 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            import time
+            self.n += 1
+            if self.n == 9:
+                time.sleep(1.0)  # injected straggler
+            return next(self.it)
+
+    tr = Trainer(model, opt.AdamWConfig(), straggler_factor=3.0,
+                 hooks={"on_straggler": lambda s, dt, med: events.append(s)})
+    state = tr.init_state()
+    state, _ = tr.run(state, iter(SlowLoader()), steps=10, log_every=0)
+    assert tr.straggler_events >= 1 and events
+
+
+def test_data_determinism():
+    src = SyntheticLM(128, 16, 8, seed=7)
+    a = src.batch(3)
+    b = src.batch(3)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    h0 = ShardedLoader(src, host_id=0, n_hosts=2)
+    h1 = ShardedLoader(src, host_id=1, n_hosts=2)
+    b0, b1 = next(iter(h0)), next(iter(h1))
+    assert b0["tokens"].shape[0] == 4
+    assert not np.array_equal(np.asarray(b0["tokens"]), np.asarray(b1["tokens"]))
