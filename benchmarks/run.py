@@ -1,7 +1,10 @@
 """Benchmark orchestrator: one section per paper table/figure.
 
-Prints ``name,value,derived`` CSV rows. ``--quick`` trims trace sizes for
-smoke use; ``--section <name>`` runs one section.
+Prints ``name,value,derived`` CSV rows. ``--quick`` trims trace sizes
+for smoke use and exits non-zero if any section fails, so it doubles as
+a CI smoke gate (``python -m benchmarks.run --quick``); ``--section
+<name>`` runs one section (e.g. ``campaign_speed`` for the batched-vs-
+looped sweep comparison).
 """
 from __future__ import annotations
 
@@ -27,11 +30,16 @@ def main() -> None:
         "trcd_endtoend": (lambda: paper.bench_trcd_endtoend(8)) if args.quick
         else paper.bench_trcd_endtoend,                          # Fig. 13
         "sim_speed": paper.bench_sim_speed,                     # Fig. 14
+        "campaign_speed": (lambda: paper.bench_campaign_speed(3))
+        if args.quick else paper.bench_campaign_speed,          # run_many
         "lm_traces": paper.bench_lm_traces,                     # framework tie-in
         "kernels": kernels_bench.bench_kernels,
         "roofline": lambda: roofline.csv_rows(roofline.load_records("sp")),
     }
     if args.section:
+        if args.section not in sections:
+            ap.error(f"unknown section {args.section!r}; "
+                     f"choose from: {', '.join(sections)}")
         sections = {args.section: sections[args.section]}
 
     print("name,value,derived")
@@ -46,6 +54,7 @@ def main() -> None:
             print(f"{name},ERROR,{type(e).__name__}:{e}")
         print(f"_section_{name}_seconds,{time.perf_counter()-t0:.1f},wall",
               flush=True)
+    print(f"_failures,{failures},smoke_gate")
     if failures:
         sys.exit(1)
 

@@ -1,5 +1,13 @@
-"""Quickstart: train a tiny GQA LM on synthetic data, checkpoint, and
-serve a few greedy tokens — the whole public API in ~40 lines.
+"""Quickstart: train a tiny GQA LM on synthetic data, checkpoint, serve
+a few greedy tokens, then run a batched DRAM-emulation campaign — the
+whole public API in ~60 lines.
+
+The emulation side has two entry points: ``emulator.run`` for one
+(trace, system, mode) point, and ``emulator.run_many`` /
+``campaign.Campaign`` for sweeps — a Campaign collects grid points,
+groups them by compile key (trace bucket, SystemConfig, mode, Bloom
+shape), and executes each group as one vmapped jit call, so a sweep
+compiles once per group instead of once per point.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,6 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import traces
+from repro.core.campaign import Campaign
+from repro.core.dram import Geometry
+from repro.core.timescale import JETSON_NANO
 from repro.data.pipeline import ShardedLoader, SyntheticLM
 from repro.models import model_zoo
 from repro.serve.engine import ServeEngine
@@ -36,6 +48,21 @@ def main():
     prompt = np.asarray(src.batch(0)["tokens"])[0, :16]
     out = engine.generate(prompt, max_new=16)
     print("generated:", out)
+
+    # batched emulation campaign: sweep PolyBench kernels x {ts, nots}
+    # in grouped vmapped calls (one compile per group, not per point)
+    geo = Geometry()
+    camp = Campaign()
+    for i, kern in enumerate(traces.POLYBENCH[:3]):
+        tr, _ = traces.polybench_trace(kern, geo, max_accesses=2000, seed=i)
+        if tr is None:
+            continue
+        for mode in ("ts", "nots"):
+            camp.add(tr, JETSON_NANO, mode=mode, kernel=kern.name)
+    print(f"\ncampaign: {len(camp)} points in {camp.n_groups()} compile groups")
+    for r in camp.run():
+        print(f"  {r['kernel']:>10s} {r['mode']:>4s}: "
+              f"{int(r['exec_cycles']):>9d} cycles")
 
 
 if __name__ == "__main__":

@@ -22,13 +22,17 @@ def main():
     rc_ts = RowClone(JETSON_NANO, dev)        # EasyDRAM - Time Scaling
     rc_nots = RowClone(PIDRAM_LIKE, dev)      # PiDRAM-like - No Time Scaling
 
+    sizes = (65536, 1 << 20, 4 << 20)
     for setting in ("noflush", "clflush"):
         print(f"\n=== Copy, {setting} (speedup over CPU ld/st copy) ===")
         print(f"{'size':>10s} {'TS':>8s} {'NoTS':>8s} {'inflation':>10s}")
-        for nb in (65536, 1 << 20, 4 << 20):
-            a = rc_ts.evaluate(nb, "copy", setting, "ts", cpu_line_delta=TS_LINE)
-            b = rc_nots.evaluate(nb, "copy", setting, "nots",
-                                 cpu_line_delta=NOTS_LINE)
+        # the whole size sweep runs as one batched campaign per system
+        # (emulator.run_many under the hood: one compile per group)
+        a_all = rc_ts.evaluate_batch(sizes, "copy", setting, "ts",
+                                     cpu_line_delta=TS_LINE)
+        b_all = rc_nots.evaluate_batch(sizes, "copy", setting, "nots",
+                                       cpu_line_delta=NOTS_LINE)
+        for nb, a, b in zip(sizes, a_all, b_all):
             s_ts = a["rowclone"].speedup_vs_cpu
             s_no = b["rowclone"].speedup_vs_cpu
             print(f"{nb:>10d} {s_ts:>7.1f}x {s_no:>7.1f}x {s_no/s_ts:>9.1f}x")

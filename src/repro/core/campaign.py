@@ -1,0 +1,118 @@
+"""Batched emulation campaigns over (workload x system x mode x technique).
+
+The paper's methodology (Secs. 6-8; PiDRAM / DRAM Bender share it) is
+sweep-heavy: one DRAM technique is judged across many workloads, sizes,
+system configs, and evaluation modes. Point-at-a-time evaluation pays a
+fresh ``jax.jit`` compile of the ``2N+4``-step scan for every sweep
+point; a :class:`Campaign` instead collects the whole grid, groups
+points by compile key (trace-length bucket, ``SystemConfig``, mode,
+Bloom-filter shape), executes each group as ONE vmapped
+:func:`repro.core.emulator.run_many` call, and returns tidy per-point
+records in submission order.
+
+Usage::
+
+    from repro.core.campaign import Campaign
+
+    c = Campaign()
+    for kern, tr in traces_by_kernel.items():
+        c.add(tr, JETSON_NANO, mode="ts", workload=kern)
+        c.add(tr, JETSON_NANO, mode="ts", bloom=bloom_tuple,
+              workload=kern, technique="trcd")
+    records = c.run()          # [{workload, technique, exec_cycles, ...}]
+
+Results are bit-identical to looping ``emulator.run`` over the points —
+the batch axis only vectorizes the same exact int32 arithmetic — but a
+sweep compiles at most once per group and dispatches once per group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core import emulator
+from repro.core.emulator import Trace
+from repro.core.timescale import SystemConfig
+
+
+@dataclasses.dataclass
+class Point:
+    """One grid point. ``meta`` is carried through to the result."""
+    trace: Trace
+    sys: SystemConfig
+    mode: str = "ts"
+    bloom: Optional[tuple] = None       # (words_u32, k, m_bits)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def group_key(self) -> tuple:
+        # derived from emulator.compile_key (one source of truth for
+        # bucket / mode / bloom-shape normalization), dropping the batch
+        # axis, which is unknown until run()
+        k = emulator.compile_key(emulator._bucket(self.trace.n), 1,
+                                 self.sys, self.mode, self.bloom)
+        return k[:1] + k[2:]
+
+
+class Campaign:
+    """Collect grid points, execute them in compile-key groups.
+
+    ``add`` order is preserved in ``run()``'s output; extra keyword
+    arguments to ``add`` (workload name, technique label, size, ...)
+    come back verbatim on each record, which is what makes the output
+    tidy-data-friendly for the paper-figure benchmarks.
+    """
+
+    def __init__(self) -> None:
+        self.points: List[Point] = []
+
+    def add(self, trace: Trace, sys: SystemConfig, mode: str = "ts",
+            bloom: Optional[tuple] = None, **meta) -> "Campaign":
+        assert mode in ("ts", "nots", "reference")
+        self.points.append(Point(trace, sys, mode, bloom, meta))
+        return self
+
+    def extend(self, traces: Sequence[Trace], sys: SystemConfig,
+               mode: str = "ts", bloom: Optional[tuple] = None,
+               metas: Optional[Sequence[dict]] = None) -> "Campaign":
+        traces = list(traces)
+        metas = [{}] * len(traces) if metas is None else list(metas)
+        assert len(metas) == len(traces), \
+            f"metas ({len(metas)}) must match traces ({len(traces)})"
+        for tr, m in zip(traces, metas):
+            self.add(tr, sys, mode, bloom, **m)
+        return self
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def run(self) -> List[dict]:
+        """Execute every point; one batched call per compile-key group.
+
+        Returns one record per point, in ``add`` order: the emulator
+        output dict plus the point's ``meta`` entries.
+        """
+        groups: Dict[tuple, List[int]] = {}
+        for i, p in enumerate(self.points):
+            groups.setdefault(p.group_key(), []).append(i)
+
+        results: List[Optional[dict]] = [None] * len(self.points)
+        for key, idxs in groups.items():
+            pts = [self.points[i] for i in idxs]
+            p0 = pts[0]
+            blooms = None
+            if p0.bloom is not None:
+                # one shared filter broadcasts; distinct ones stack
+                same = all(b.bloom is p0.bloom for b in pts)
+                blooms = p0.bloom if same else [p.bloom for p in pts]
+            outs = emulator.run_many([p.trace for p in pts], p0.sys,
+                                     mode=[p.mode for p in pts],
+                                     blooms=blooms)
+            for p, i, out in zip(pts, idxs, outs):
+                clash = set(out) & set(p.meta)
+                assert not clash, \
+                    f"meta keys shadow emulator result fields: {sorted(clash)}"
+                results[i] = {**out, **p.meta}
+        return results
+
+    def n_groups(self) -> int:
+        return len({p.group_key() for p in self.points})

@@ -13,12 +13,26 @@ complete an N-request trace. All arithmetic is exact int32 (DRAM ticks /
 processor cycles, fixed-point 1/4096 conversion); results are
 bit-reproducible, which is what lets the Sec. 6 validation assert exact
 invariance of time-scaled results to FPGA-side clocks.
+
+Entry points:
+
+* :func:`run` — one trace, one config, one mode. A thin wrapper over a
+  batch of one.
+* :func:`run_many` — a batched campaign step: pads every trace to one
+  length bucket, stacks them on a leading axis, and ``jax.vmap``s the
+  scan over that axis (optionally over per-trace Bloom filters too), so
+  a whole sweep shares ONE compile and ONE device dispatch. Compiled
+  executables are cached at module level keyed on
+  ``(bucket, batch, sys, mode, bloom-shape)`` — repeated sweeps never
+  recompile (see :func:`cache_stats`). Results are bit-identical to
+  per-trace :func:`run`: the batch axis only vectorizes the same exact
+  int32 arithmetic. For grids that also vary ``SystemConfig`` /
+  technique, drive this through :class:`repro.core.campaign.Campaign`.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
+from typing import List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -98,9 +112,11 @@ def _issue_frontier(t_issue, t_resp, queue, kindj, delta, dep, ptr, W, upto=4):
     return t_issue, t_resp, queue, ptr
 
 
-@partial(jax.jit, static_argnames=("sys", "mode", "bloom_k", "bloom_m"))
-def _run(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
-         bloom_words, bloom_k: int, bloom_m: int):
+def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
+              bloom_words, bloom_k: int, bloom_m: int):
+    """One trace's scan body. Pure traceable function (jit/vmap applied
+    by the compile cache below); ``sys``/``mode``/``bloom_k``/``bloom_m``
+    are Python-level constants baked into the compiled program."""
     N = kind.shape[0]
     t = sys.timing
     geo = sys.geometry
@@ -242,6 +258,188 @@ def _bucket(n: int) -> int:
     return b
 
 
+def _batch_bucket(b: int) -> int:
+    """Pad the batch axis to a power of two so sweeps of nearby sizes
+    share one executable (padding rows are all-NOP traces)."""
+    p = 1
+    while p < b:
+        p *= 2
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Batched campaigns: module-level compile cache over vmapped executables.
+# ---------------------------------------------------------------------------
+
+_COMPILE_CACHE: dict = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _norm_mode(mode: str) -> str:
+    """'reference' compiles to the exact 'ts' program — that coincidence
+    IS the paper's time-scaling claim — so they share one executable."""
+    return "ts" if mode == "reference" else mode
+
+
+def _is_bloom_triple(b) -> bool:
+    """One (words_u32, k, m_bits) filter: words array + two scalars (as
+    opposed to a per-trace sequence of such triples)."""
+    return (len(b) == 3 and not isinstance(b[0], (tuple, list))
+            and np.ndim(b[1]) == 0 and np.ndim(b[2]) == 0)
+
+
+def compile_key(bucket: int, batch: int, sys: SystemConfig, mode: str,
+                blooms) -> tuple:
+    """Cache key for one batched executable. ``blooms`` is None, one
+    shared (words, k, m_bits) filter, or a per-trace sequence of
+    identically-shaped triples — shared-vs-stacked decided by content
+    (like :func:`_normalize_blooms`), not container type."""
+    if blooms is None:
+        bshape = None
+    elif _is_bloom_triple(blooms):
+        bshape = ("shared", int(np.asarray(blooms[0]).shape[0]),
+                  blooms[1], blooms[2])
+    else:
+        b0 = tuple(blooms[0])
+        bshape = ("stacked", int(np.asarray(b0[0]).shape[0]), b0[1], b0[2])
+    return (bucket, _batch_bucket(batch), sys, _norm_mode(mode), bshape)
+
+
+def cache_stats() -> dict:
+    """{'hits': n, 'misses': n} over :func:`run_many` compile-cache
+    lookups since the last :func:`cache_clear` (misses == compiles)."""
+    return dict(_CACHE_STATS)
+
+
+def cache_clear() -> None:
+    _COMPILE_CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+def _batched_fn(key: tuple):
+    """Jitted vmapped runner for one compile key; built once per key."""
+    fn = _COMPILE_CACHE.get(key)
+    if fn is not None:
+        _CACHE_STATS["hits"] += 1
+        return fn
+    _CACHE_STATS["misses"] += 1
+    _, _, sys, mode, bshape = key
+
+    if bshape is None:
+        def fn(kind, bank, row, delta, dep):
+            return jax.vmap(lambda k, b, r, d, dp: _run_core(
+                k, b, r, d, dp, sys, mode, None, 0, 1))(
+                kind, bank, row, delta, dep)
+    else:
+        stacked, _, bk, bm = bshape
+        words_axis = 0 if stacked == "stacked" else None
+
+        def fn(kind, bank, row, delta, dep, words):
+            return jax.vmap(
+                lambda k, b, r, d, dp, w: _run_core(
+                    k, b, r, d, dp, sys, mode, w, bk, bm),
+                in_axes=(0, 0, 0, 0, 0, words_axis))(
+                kind, bank, row, delta, dep, words)
+
+    fn = jax.jit(fn)
+    _COMPILE_CACHE[key] = fn
+    return fn
+
+
+def _finalize(out_row: dict, padded: Trace, sys: SystemConfig,
+              mode: str) -> dict:
+    """Per-trace derived metrics — identical math to the original
+    single-trace ``run`` so batched results stay drop-in compatible."""
+    out = {kk: np.asarray(v) for kk, v in out_row.items()}
+    out["exec_seconds"] = sys.cycles_to_seconds(out["exec_cycles"], mode)
+    out["mode"] = mode
+    out["n_requests"] = int((padded.kind != NOP).sum())
+    lat = out["t_resp"] - out["t_issue"]
+    ok = (padded.kind != NOP) & (out["t_resp"] < int(BIG))
+    out["avg_load_latency_cycles"] = float(lat[ok].mean()) if ok.any() else 0.0
+    return out
+
+
+def _normalize_blooms(blooms, n: int):
+    """blooms: None | one (words, k, m_bits) filter (any sequence type)
+    | a per-trace sequence of identically-shaped filter triples. ->
+    None | shared tuple | list of tuples (no mixed None: group
+    upstream). Shared-vs-per-trace is decided by content, not container
+    type, so a list-typed single filter still broadcasts."""
+    if blooms is None:
+        return None
+    blooms = list(blooms)
+    if _is_bloom_triple(blooms):
+        return tuple(blooms)
+    blooms = [tuple(b) for b in blooms]
+    assert len(blooms) == n, "per-trace blooms must match len(traces)"
+    b0 = blooms[0]
+    assert all(_is_bloom_triple(b) and b[1] == b0[1] and b[2] == b0[2]
+               and np.asarray(b[0]).shape == np.asarray(b0[0]).shape
+               for b in blooms), \
+        "per-trace blooms must share (words-shape, k, m_bits); use " \
+        "Campaign to mix bloom/no-bloom points in one grid"
+    return blooms
+
+
+def run_many(traces: Sequence[Trace], sys: SystemConfig,
+             mode: Union[str, Sequence[str]] = "ts",
+             blooms=None) -> List[dict]:
+    """Evaluate many traces under one ``SystemConfig`` in batched calls.
+
+    ``mode`` is one of 'ts' | 'nots' | 'reference', or a per-trace
+    sequence of them. ``blooms`` is None, one shared ``(words, k,
+    m_bits)`` tuple, or a per-trace list of identically-shaped tuples
+    (stacked and vmapped alongside the traces).
+
+    Traces are grouped by ``(length-bucket, mode)``; each group pads to
+    its bucket, pads the batch axis to a power of two with all-NOP
+    traces, and executes as ONE vmapped, jit-cached call. Returns one
+    dict per input trace, in input order, bit-identical to
+    ``run(trace, sys, mode, bloom)``.
+    """
+    traces = list(traces)
+    n = len(traces)
+    modes = [mode] * n if isinstance(mode, str) else list(mode)
+    assert len(modes) == n, "per-trace modes must match len(traces)"
+    assert all(m in ("ts", "nots", "reference") for m in modes)
+    blooms = _normalize_blooms(blooms, n)
+
+    groups: dict = {}  # (bucket, normalized mode) -> [trace index]
+    for i, tr in enumerate(traces):
+        groups.setdefault((_bucket(tr.n), _norm_mode(modes[i])), []).append(i)
+
+    results: List[Optional[dict]] = [None] * n
+    for (bucket, gmode), idxs in groups.items():
+        padded = [pad_trace(traces[i], bucket) for i in idxs]
+        bb = _batch_bucket(len(idxs))
+        if bb > len(idxs):  # all-NOP filler rows, discarded below
+            filler = Trace.of(np.full(bucket, 4), np.zeros(bucket),
+                              np.zeros(bucket), np.zeros(bucket))
+            padded += [filler] * (bb - len(idxs))
+        stacked = [jnp.asarray(np.stack([getattr(p, f) for p in padded]))
+                   for f in ("kind", "bank", "row", "delta", "dep")]
+
+        key = compile_key(bucket, len(idxs), sys, gmode, blooms)
+        fn = _batched_fn(key)
+        if blooms is None:
+            out = fn(*stacked)
+        elif isinstance(blooms, tuple):
+            out = fn(*stacked, jnp.asarray(blooms[0]))
+        else:
+            words = np.stack([np.asarray(blooms[i][0]) for i in idxs])
+            if bb > len(idxs):
+                words = np.concatenate(
+                    [words, np.repeat(words[:1], bb - len(idxs), axis=0)])
+            out = fn(*stacked, jnp.asarray(words))
+        out = {kk: np.asarray(v) for kk, v in out.items()}
+        for j, i in enumerate(idxs):
+            row = {kk: v[j] for kk, v in out.items()}
+            results[i] = _finalize(row, padded[j], sys, modes[i])
+    return results
+
+
 def run(trace: Trace, sys: SystemConfig, mode: str = "ts",
         bloom: Optional[tuple] = None) -> dict:
     """mode: 'ts' | 'nots' | 'reference'. bloom: (words_u32, k, m_bits).
@@ -250,21 +448,9 @@ def run(trace: Trace, sys: SystemConfig, mode: str = "ts",
     controller at the modeled clock. Its math must coincide with 'ts' —
     that coincidence (validated in tests/benchmarks) IS the paper's
     time-scaling accuracy claim.
+
+    A thin wrapper over a :func:`run_many` batch of one — single-trace
+    and campaign paths share one compiled-program cache.
     """
     assert mode in ("ts", "nots", "reference")
-    trace = pad_trace(trace, _bucket(trace.n))
-    words, k, m = (None, 0, 1)
-    if bloom is not None:
-        words, k, m = jnp.asarray(bloom[0]), bloom[1], bloom[2]
-    out = _run(*trace.arrays(), sys=sys,
-               mode=("ts" if mode == "reference" else mode),
-               bloom_words=words, bloom_k=k, bloom_m=m)
-    out = {kk: np.asarray(v) for kk, v in out.items()}
-    out["exec_seconds"] = sys.cycles_to_seconds(out["exec_cycles"], mode)
-    out["mode"] = mode
-    n_req = int((trace.kind != NOP).sum())
-    out["n_requests"] = n_req
-    lat = out["t_resp"] - out["t_issue"]
-    ok = (trace.kind != NOP) & (out["t_resp"] < int(BIG))
-    out["avg_load_latency_cycles"] = float(lat[ok].mean()) if ok.any() else 0.0
-    return out
+    return run_many([trace], sys, mode=mode, blooms=bloom)[0]

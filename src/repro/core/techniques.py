@@ -6,15 +6,22 @@ allocation constraints (alignment / granularity / subarray mapping /
 coherence) with profiling-driven fallback; ``TRCDReduction`` runs the
 two-stage characterize -> Bloom-filter flow and hands the filter to the
 engine, which consults it on every row activation.
+
+Evaluation goes through the batched campaign path
+(``emulator.run_many`` / ``campaign.Campaign``): ``evaluate_batch`` /
+``evaluate_traces`` sweep many sizes or workloads with one compile and
+one dispatch per compile-key group; the single-point ``evaluate`` /
+``evaluate_trace`` are thin wrappers over a batch of one pair.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import emulator, traces
+from repro.core.campaign import Campaign
 from repro.core.bloom import BloomFilter
 from repro.core.dram import Geometry
 from repro.core.profiling import DeviceModel
@@ -48,21 +55,40 @@ class RowClone:
         cpu_line_delta models the per-line instruction cost of the
         *modeled* CPU's copy loop (a 3-wide OoO core with 64B NEON moves
         retires far fewer cycles/line than a 50 MHz single-issue rv64)."""
+        return self.evaluate_batch([n_bytes], workload, setting, mode_ts,
+                                   cpu_line_delta)[0]
+
+    def evaluate_batch(self, sizes: Sequence[int], workload: str = "copy",
+                       setting: str = "noflush", mode_ts: str = "ts",
+                       cpu_line_delta: int = None) -> List[dict]:
+        """Sweep ``sizes`` in one batched campaign: all (cpu, rowclone)
+        trace pairs run through a single ``run_many`` call per
+        compile-key group instead of one compile per point. Returns one
+        {'cpu': ..., 'rowclone': ...} dict per size, in order."""
         gen = traces.copy_workload if workload == "copy" else traces.init_workload
         kw = {} if cpu_line_delta is None else {"cpu_line_delta": cpu_line_delta}
-        out = {}
-        for mode in ("cpu", "rowclone"):
-            tr, meta = gen(n_bytes, self.geo, mode=mode, device=self.device,
-                           setting=setting, **kw)
-            r = emulator.run(tr, self.sys, mode=mode_ts)
-            out[mode] = RowCloneResult(
-                mode=mode, setting=setting, n_bytes=n_bytes,
-                exec_cycles=int(r["exec_cycles"]),
-                exec_seconds=r["exec_seconds"],
-                fallback_rows=meta["fallback_rows"])
-        cpu = out["cpu"].exec_cycles
-        rc = out["rowclone"].exec_cycles
-        out["rowclone"].speedup_vs_cpu = cpu / max(rc, 1)
+        sizes = list(sizes)
+        pairs, metas = [], []
+        for nb in sizes:
+            for mode in ("cpu", "rowclone"):
+                tr, meta = gen(nb, self.geo, mode=mode, device=self.device,
+                               setting=setting, **kw)
+                pairs.append(tr)
+                metas.append(meta)
+        runs = emulator.run_many(pairs, self.sys, mode=mode_ts)
+        out = []
+        for j, nb in enumerate(sizes):  # positional: duplicate sizes stay
+            d = {}                      # independent evaluations
+            for off, mode in enumerate(("cpu", "rowclone")):
+                r = runs[2 * j + off]
+                d[mode] = RowCloneResult(
+                    mode=mode, setting=setting, n_bytes=nb,
+                    exec_cycles=int(r["exec_cycles"]),
+                    exec_seconds=r["exec_seconds"],
+                    fallback_rows=metas[2 * j + off]["fallback_rows"])
+            d["rowclone"].speedup_vs_cpu = \
+                d["cpu"].exec_cycles / max(d["rowclone"].exec_cycles, 1)
+            out.append(d)
         return out
 
 
@@ -106,10 +132,21 @@ class TRCDReduction:
 
     def evaluate_trace(self, trace, mode_ts: str = "ts"):
         """Run a workload with and without reduced-tRCD scheduling."""
-        base = emulator.run(trace, self.sys, mode=mode_ts)
-        red = emulator.run(trace, self.sys, mode=mode_ts, bloom=self.bloom_tuple)
-        return {
-            "base_cycles": int(base["exec_cycles"]),
-            "reduced_cycles": int(red["exec_cycles"]),
-            "speedup": int(base["exec_cycles"]) / max(int(red["exec_cycles"]), 1),
-        }
+        return self.evaluate_traces([trace], mode_ts)[0]
+
+    def evaluate_traces(self, trs: Sequence, mode_ts: str = "ts") -> List[dict]:
+        """Batched base-vs-reduced sweep: every trace is evaluated with
+        and without the Bloom filter through one Campaign (one compile
+        per (bucket, bloom-presence) group). Returns per-trace dicts in
+        input order."""
+        bloom = self.bloom_tuple
+        c = Campaign()
+        for i, tr in enumerate(trs):
+            c.add(tr, self.sys, mode=mode_ts, i=i, arm="base")
+            c.add(tr, self.sys, mode=mode_ts, bloom=bloom, i=i, arm="reduced")
+        arms = {(r["i"], r["arm"]): int(r["exec_cycles"]) for r in c.run()}
+        return [{
+            "base_cycles": arms[(i, "base")],
+            "reduced_cycles": arms[(i, "reduced")],
+            "speedup": arms[(i, "base")] / max(arms[(i, "reduced")], 1),
+        } for i in range(len(trs))]

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.utils.jax_compat import pvary, shard_map, shard_map_kwargs
+
 
 def pipeline_apply(params_stacked, x_mb, stage_fn, mesh, axis: str = "pod"):
     """params_stacked: pytree with leading dim = n_stages (sharded on axis).
@@ -25,8 +27,9 @@ def pipeline_apply(params_stacked, x_mb, stage_fn, mesh, axis: str = "pod"):
 
     pspec_params = jax.tree_util.tree_map(lambda _: P(axis), params_stacked)
 
-    @partial(jax.shard_map, mesh=mesh,
-             in_specs=(pspec_params, P()), out_specs=P())
+    @partial(shard_map, mesh=mesh,
+             in_specs=(pspec_params, P()), out_specs=P(),
+             **shard_map_kwargs())
     def run(params_local, x_all):
         # params_local leaves: [1, ...] — this device's stage
         p = jax.tree_util.tree_map(lambda a: a[0], params_local)
@@ -35,8 +38,8 @@ def pipeline_apply(params_stacked, x_mb, stage_fn, mesh, axis: str = "pod"):
         buf = jnp.zeros_like(x_all[0])          # current inbound activation
         outs = jnp.zeros_like(x_all)
         # carries become device-varying after the ppermute; mark them so
-        buf = jax.lax.pcast(buf, (axis,), to="varying")
-        outs = jax.lax.pcast(outs, (axis,), to="varying")
+        buf = pvary(buf, (axis,))
+        outs = pvary(outs, (axis,))
 
         def tick(carry, t):
             buf, outs = carry

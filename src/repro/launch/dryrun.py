@@ -33,6 +33,7 @@ from repro.train import optimizer as opt
 from repro.train.trainer import make_train_step
 from repro.utils import hlo as hlo_util
 from repro.utils import hlo_cost
+from repro.utils.jax_compat import cost_analysis_dict
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
 
@@ -107,7 +108,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, remat=True,
         rules_mod.set_rules(None)
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     txt = compiled.as_text()
     coll = hlo_util.collective_bytes(txt)
     # loop-aware accounting: XLA cost_analysis counts while bodies once;

@@ -1,0 +1,67 @@
+"""Version-compat shims over the installed JAX.
+
+The codebase targets the shard_map/cost_analysis API surface of recent
+JAX, but must run on whatever the container ships (currently 0.4.37).
+Every call site goes through these helpers instead of probing
+``jax.<attr>`` itself, so a JAX upgrade changes exactly one file.
+
+* :data:`shard_map` — ``jax.shard_map`` when present (>= 0.6), else
+  ``jax.experimental.shard_map.shard_map``.
+* :func:`pvary` — mark a value device-varying over mesh axes. Newer
+  shard_map requires the annotation (``jax.lax.pvary`` /
+  ``jax.lax.pcast``); older shard_map has no such notion, so the shim
+  degrades to identity (pair with ``shard_map_kwargs`` below, which
+  disables replication checking there).
+* :func:`shard_map_kwargs` — extra kwargs for :data:`shard_map` on this
+  JAX version (``check_rep=False`` on old JAX, where device-varying
+  carries would otherwise fail the replication checker).
+* :func:`cost_analysis_dict` — ``Compiled.cost_analysis()`` normalized
+  to one flat dict. Depending on version it returns a dict, a list with
+  one dict per partition, or None.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+    _NEW_SHARD_MAP = True
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+    _NEW_SHARD_MAP = False
+
+
+def shard_map_kwargs() -> Dict[str, Any]:
+    """Extra kwargs to pass to :data:`shard_map` on this JAX version."""
+    return {} if _NEW_SHARD_MAP else {"check_rep": False}
+
+
+def pvary(x, axis_names):
+    """Mark ``x`` device-varying over ``axis_names`` inside shard_map."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axis_names, to="varying")
+    return x  # old shard_map: no varying-ness tracking (check_rep=False)
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` as one flat {metric: value} dict.
+
+    Newer JAX returns a single dict; 0.4.x returns a list with one dict
+    per partition (sum them — per-device metrics over an SPMD program);
+    some backends return None.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    out: Dict[str, float] = {}
+    for part in cost:
+        for k, v in part.items():
+            if isinstance(v, (int, float)):
+                out[k] = out.get(k, 0.0) + v
+    return out

@@ -1,0 +1,190 @@
+"""Batched campaigns (`run_many` / `Campaign`) vs the single-trace path:
+bit-exactness, Sec. 6 invariants under batching, compile-cache behavior."""
+import numpy as np
+import pytest
+
+from repro.core import emulator
+from repro.core.bloom import BloomFilter
+from repro.core.campaign import Campaign
+from repro.core.emulator import Trace, run, run_many
+from repro.core.timescale import JETSON_NANO
+
+
+def mixed_traces(n_traces=4, base=60, seed=3):
+    rng = np.random.RandomState(seed)
+    out = []
+    for i in range(n_traces):
+        n = base + 17 * i  # varied lengths, one 256 bucket
+        out.append(Trace.of(kind=rng.randint(0, 2, n),
+                            bank=rng.randint(0, 16, n),
+                            row=rng.randint(0, 4096, n),
+                            delta=rng.randint(1, 8, n),
+                            dep=rng.randint(0, 2, n)))
+    return out
+
+
+def small_bloom(seed=0, m_bits=1 << 14, k=3):
+    rng = np.random.RandomState(seed)
+    bf = BloomFilter.build(rng.randint(0, 1 << 19, 200).astype(np.uint32),
+                           m_bits=m_bits, k=k)
+    return (bf.bits, bf.k, bf.m_bits)
+
+
+class TestRunManyExactness:
+    def test_matches_per_trace_run(self):
+        trs = mixed_traces()
+        batch = run_many(trs, JETSON_NANO, "ts")
+        for tr, b in zip(trs, batch):
+            s = run(tr, JETSON_NANO, "ts")
+            assert int(b["exec_cycles"]) == int(s["exec_cycles"])
+            assert int(b["row_hits"]) == int(s["row_hits"])
+            np.testing.assert_array_equal(b["t_resp"], s["t_resp"])
+            np.testing.assert_array_equal(b["t_issue"], s["t_issue"])
+            assert b["avg_load_latency_cycles"] == s["avg_load_latency_cycles"]
+
+    def test_matches_with_shared_bloom(self):
+        trs = mixed_traces(3)
+        bloom = small_bloom()
+        batch = run_many(trs, JETSON_NANO, "ts", blooms=bloom)
+        for tr, b in zip(trs, batch):
+            s = run(tr, JETSON_NANO, "ts", bloom=bloom)
+            assert int(b["exec_cycles"]) == int(s["exec_cycles"])
+            np.testing.assert_array_equal(b["t_resp"], s["t_resp"])
+
+    def test_stacked_blooms_match_shared(self):
+        """Per-trace filter stacking: identical filters per trace must
+        reproduce the shared-broadcast result bit-for-bit."""
+        trs = mixed_traces(3)
+        bloom = small_bloom()
+        shared = run_many(trs, JETSON_NANO, "ts", blooms=bloom)
+        stacked = run_many(trs, JETSON_NANO, "ts", blooms=[bloom] * len(trs))
+        for a, b in zip(shared, stacked):
+            assert int(a["exec_cycles"]) == int(b["exec_cycles"])
+            np.testing.assert_array_equal(a["t_resp"], b["t_resp"])
+
+    def test_results_in_input_order(self):
+        trs = mixed_traces(4)
+        batch = run_many(trs, JETSON_NANO, "ts")
+        singles = [run(tr, JETSON_NANO, "ts") for tr in trs]
+        assert [int(b["exec_cycles"]) for b in batch] \
+            == [int(s["exec_cycles"]) for s in singles]
+
+
+class TestBatchedInvariants:
+    def test_ts_equals_reference_inside_one_batch(self):
+        """Sec. 6: the time-scaled result must coincide with the RTL
+        reference — including when both arms run inside one batched
+        campaign across ts/nots/reference and bloom arms."""
+        trs = mixed_traces(2, base=80, seed=5)
+        bloom = small_bloom(1)
+        c = Campaign()
+        for i, tr in enumerate(trs):
+            for mode in ("ts", "reference", "nots"):
+                c.add(tr, JETSON_NANO, mode=mode, i=i, arm="plain")
+            for mode in ("ts", "reference"):
+                c.add(tr, JETSON_NANO, mode=mode, bloom=bloom, i=i, arm="bloom")
+        recs = c.run()
+        by = {(r["i"], r["arm"], r["mode"]): int(r["exec_cycles"])
+              for r in recs}
+        for i in range(len(trs)):
+            assert by[(i, "plain", "ts")] == by[(i, "plain", "reference")]
+            assert by[(i, "bloom", "ts")] == by[(i, "bloom", "reference")]
+            # nots leaks FPGA-platform slowness -> must differ from ts
+            assert by[(i, "plain", "nots")] != by[(i, "plain", "ts")]
+
+    def test_per_trace_modes_in_run_many(self):
+        trs = mixed_traces(2)
+        out = run_many(trs + trs, JETSON_NANO,
+                       mode=["ts", "ts", "reference", "reference"])
+        assert int(out[0]["exec_cycles"]) == int(out[2]["exec_cycles"])
+        assert int(out[1]["exec_cycles"]) == int(out[3]["exec_cycles"])
+        assert out[2]["mode"] == "reference"
+
+
+class TestCompileCache:
+    def test_second_same_shaped_batch_hits_cache(self):
+        trs = mixed_traces(4, seed=11)
+        run_many(trs, JETSON_NANO, "ts")  # populate
+        before = emulator.cache_stats()
+        # same shapes, different contents -> must NOT recompile
+        trs2 = mixed_traces(4, seed=12)
+        run_many(trs2, JETSON_NANO, "ts")
+        after = emulator.cache_stats()
+        assert after["misses"] == before["misses"]
+        assert after["hits"] == before["hits"] + 1
+
+    def test_batch_axis_padding_shares_executable(self):
+        """3 traces pad the batch axis to 4: same executable as a
+        4-trace batch of the same bucket."""
+        run_many(mixed_traces(4, seed=13), JETSON_NANO, "ts")
+        before = emulator.cache_stats()
+        out = run_many(mixed_traces(3, seed=14), JETSON_NANO, "ts")
+        after = emulator.cache_stats()
+        assert len(out) == 3
+        assert after["misses"] == before["misses"]
+
+    def test_campaign_group_count(self):
+        trs = mixed_traces(3)
+        bloom = small_bloom()
+        c = Campaign()
+        for tr in trs:
+            c.add(tr, JETSON_NANO, mode="ts")
+            c.add(tr, JETSON_NANO, mode="ts", bloom=bloom)
+            c.add(tr, JETSON_NANO, mode="nots")
+        # one group per (bucket, sys, mode, bloom-shape)
+        assert c.n_groups() == 3
+
+    def test_mixed_ts_reference_share_group(self):
+        """'reference' compiles to the 'ts' program, so mixing the two
+        in one campaign is a single compile group — and each record
+        still reports its own mode."""
+        tr = mixed_traces(1)[0]
+        c = (Campaign().add(tr, JETSON_NANO, mode="ts")
+                       .add(tr, JETSON_NANO, mode="reference"))
+        assert c.n_groups() == 1
+        r = c.run()
+        assert int(r[0]["exec_cycles"]) == int(r[1]["exec_cycles"])
+        assert r[0]["mode"] == "ts" and r[1]["mode"] == "reference"
+
+
+class TestApiEdges:
+    def test_extend_rejects_short_metas(self):
+        c = Campaign()
+        with pytest.raises(AssertionError, match="metas"):
+            c.extend(mixed_traces(3), JETSON_NANO, metas=[{"a": 1}])
+        assert len(c) == 0  # nothing silently added
+
+    def test_meta_cannot_shadow_result_fields(self):
+        c = Campaign()
+        c.add(mixed_traces(1)[0], JETSON_NANO, exec_cycles=0)
+        with pytest.raises(AssertionError, match="shadow"):
+            c.run()
+
+    def test_list_typed_shared_bloom_broadcasts(self):
+        """Shared-vs-per-trace bloom dispatch is by content, not
+        container type: a list-typed (words, k, m) still broadcasts."""
+        trs = mixed_traces(2)
+        bloom = small_bloom()
+        a = run_many(trs, JETSON_NANO, "ts", blooms=bloom)
+        b = run_many(trs, JETSON_NANO, "ts", blooms=list(bloom))
+        for x, y in zip(a, b):
+            assert int(x["exec_cycles"]) == int(y["exec_cycles"])
+        s = run(trs[0], JETSON_NANO, "ts", bloom=list(bloom))
+        assert int(s["exec_cycles"]) == int(a[0]["exec_cycles"])
+
+    def test_campaign_list_typed_bloom(self):
+        tr = mixed_traces(1)[0]
+        bloom = small_bloom()
+        c = (Campaign().add(tr, JETSON_NANO, bloom=bloom)
+                       .add(tr, JETSON_NANO, bloom=list(bloom)))
+        assert c.n_groups() == 1  # same filter shape -> one group
+        r = c.run()
+        assert int(r[0]["exec_cycles"]) == int(r[1]["exec_cycles"])
+
+    def test_tuple_of_per_trace_blooms_stacks(self):
+        trs = mixed_traces(3)
+        blooms = tuple(small_bloom(seed) for seed in range(3))
+        stacked = run_many(trs, JETSON_NANO, "ts", blooms=blooms)
+        for tr, bf, r in zip(trs, blooms, stacked):
+            single = run(tr, JETSON_NANO, "ts", bloom=bf)
+            assert int(single["exec_cycles"]) == int(r["exec_cycles"])
