@@ -40,25 +40,34 @@ def device():
 # ---------------- Sec. 6: time-scaling validation ----------------
 
 def bench_timescale_validation():
+    """Sec. 6 validation, batched: every (kernel x {ts, reference}) arm
+    runs in one Campaign (ts and reference share one executable), and
+    the FPGA-clock invariance sweep is a second Campaign over the three
+    SMC-speed SystemConfigs."""
     rows = []
-    errs = []
-    rng = np.random.RandomState(0)
+    c = Campaign()
     for i, kern in enumerate(traces.POLYBENCH[:10]):
         tr, _ = traces.polybench_trace(kern, GEO, max_accesses=4000, seed=i)
         if tr is None:
             continue
-        a = int(run(tr, JETSON_NANO, "ts")["exec_cycles"])
-        b = int(run(tr, JETSON_NANO, "reference")["exec_cycles"])
-        errs.append(abs(a - b) / b)
+        for mode in ("ts", "reference"):
+            c.add(tr, JETSON_NANO, mode=mode, kern=kern.name)
+    arms = {(r["kern"], r["mode"]): int(r["exec_cycles"]) for r in c.run()}
+    kerns = sorted({k for k, _ in arms})
+    errs = [abs(arms[(k, "ts")] - arms[(k, "reference")])
+            / arms[(k, "reference")] for k in kerns]
     rows.append(("timescale_validation_avg_err", float(np.mean(errs)),
                  "paper<0.001"))
     rows.append(("timescale_validation_max_err", float(np.max(errs)),
                  "paper<0.01"))
     # invariance to FPGA-side clocks (the content of the claim)
     tr, _ = traces.polybench_trace(traces.POLYBENCH[0], GEO, 3000)
-    execs = {int(run(tr, dataclasses.replace(JETSON_NANO,
-                                             smc_cycles_per_decision=s),
-                     "ts")["exec_cycles"]) for s in (50, 400, 5000)}
+    inv = Campaign()
+    for s in (50, 400, 5000):
+        inv.add(tr, dataclasses.replace(JETSON_NANO,
+                                        smc_cycles_per_decision=s),
+                mode="ts", smc=s)
+    execs = {int(r["exec_cycles"]) for r in inv.run()}
     rows.append(("timescale_fpga_invariance_spread", float(len(execs) - 1),
                  "0=exact"))
     return rows
@@ -177,7 +186,19 @@ def bench_trcd_endtoend(n_kernels=None):
 
 # ---------------- Fig. 14: simulation speed ----------------
 
-def bench_sim_speed():
+def _timed_median(fn, reps=5):
+    """Median warm wall-clock of fn() over reps (first call not timed)."""
+    fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2], out
+
+
+def bench_sim_speed(steady_n=4000, steady_batch=8):
     rows = []
     names, trs = [], []
     for i, kern in enumerate(traces.POLYBENCH[:6]):
@@ -207,6 +228,39 @@ def bench_sim_speed():
     total = float(sum(int(r["exec_cycles"]) for r in rs))
     rows.append(("sim_speed_batched_MHz", round(total / dt / 1e6, 2),
                  f"{len(trs)}_kernels_one_dispatch"))
+
+    # steady-state engine A/B at N=steady_n: the O(Q)-per-slot core vs the
+    # kept pre-optimization reference core (emulator.run_ref_many), same
+    # batch, both warm — compile amortization plays no part here. The
+    # paper's headline axis (Fig. 14) is evaluation throughput, so run.py
+    # fails the run when this ratio is missing or below its 2x gate.
+    rng = np.random.RandomState(11)
+    steady = []
+    for _ in range(steady_batch):
+        steady.append(Trace.of(kind=rng.randint(0, 2, steady_n),
+                               bank=rng.randint(0, 16, steady_n),
+                               row=rng.randint(0, 4096, steady_n),
+                               delta=rng.randint(1, 8, steady_n),
+                               dep=rng.randint(0, 2, steady_n)))
+    t_fast, out_fast = _timed_median(
+        lambda: run_many(steady, JETSON_NANO, "ts"))
+    t_ref, out_ref = _timed_median(
+        lambda: emulator.run_ref_many(steady, JETSON_NANO, "ts"))
+    fast_cycles = [int(r["exec_cycles"]) for r in out_fast]
+    assert fast_cycles == [int(r["exec_cycles"]) for r in out_ref], \
+        "optimized core diverged from the reference core"
+    total = float(sum(fast_cycles))
+    speedup = t_ref / max(t_fast, 1e-9)
+    rows.append(("sim_speed_steady_MHz", round(total / t_fast / 1e6, 2),
+                 f"{steady_batch}x{steady_n}_reqs_warm"))
+    rows.append(("sim_speed_steady_ref_MHz", round(total / t_ref / 1e6, 2),
+                 "pre_optimization_core"))
+    # gate enforcement (>=2x) lives in benchmarks/run.py (STEADY_GATE),
+    # which fails the run when this row is missing or below gate — an
+    # exception here would discard the measurements needed to diagnose
+    # the regression
+    rows.append(("sim_speed_steady_speedup_x", round(speedup, 2),
+                 "accept>=2x"))
     return rows
 
 
@@ -221,10 +275,13 @@ def bench_campaign_speed(n_traces=16, n_requests=180):
     their points differ in bucket / SystemConfig / mode / bloom, so the
     old per-point jit rarely hit cache; simulated by clearing the cache
     around each point) vs one batched Campaign that compiles at most
-    once per (bucket, mode, bloom-shape) group. Steady-state (warm
-    cache) wall-clocks are reported too: on XLA:CPU the vmapped scan
-    has no per-step throughput win, so the headline speedup is compile
-    amortization, not execution. Acceptance: cold speedup >= 3x."""
+    once per (bucket, slot-budget, mode, bloom-shape) group.
+    Steady-state (warm cache) wall-clocks are reported too: with the
+    O(Q)-per-slot core the vmapped batch amortizes per-slot dispatch
+    overhead across the batch axis, so batched execution now beats
+    warm looping as well (campaign_warm_speedup_x; the enforced >=2x
+    engine gate at N=4000 lives in sim_speed). Acceptance: cold
+    speedup >= 3x."""
     rng = np.random.RandomState(7)
     trs = []
     for i in range(n_traces):
@@ -266,6 +323,7 @@ def bench_campaign_speed(n_traces=16, n_requests=180):
     assert stats["misses"] == expected_groups, \
         f"compiled {stats['misses']} times for {expected_groups} groups"
     speedup = t_loop_cold / max(t_batch_cold, 1e-9)
+    warm_speedup = t_loop_warm / max(t_batch_warm, 1e-9)
     if len(grid) >= 32:  # full-size run: amortization must dominate
         assert speedup >= 3.0, \
             f"cold campaign speedup {speedup:.2f}x below the 3x gate"
@@ -277,6 +335,8 @@ def bench_campaign_speed(n_traces=16, n_requests=180):
         ("campaign_speedup_x", round(speedup, 2), "accept>=3x"),
         ("campaign_looped_warm_s", round(t_loop_warm, 2), "jit_cache_hot"),
         ("campaign_batched_warm_s", round(t_batch_warm, 2), "jit_cache_hot"),
+        ("campaign_warm_speedup_x", round(warm_speedup, 2),
+         "steady_state_batched_vs_looped"),
         ("campaign_compile_groups", stats["misses"],
          "one_per_bucket_mode_bloom"),
     ]
@@ -285,24 +345,28 @@ def bench_campaign_speed(n_traces=16, n_requests=180):
 # ---------------- LM x EasyDRAM: the framework tie-in ----------------
 
 def bench_lm_traces():
-    """DRAM-level evaluation of LM serving traffic + RowClone KV fork."""
+    """DRAM-level evaluation of LM serving traffic + RowClone KV fork.
+    All arches' decode traces and the kv-fork pair run through batched
+    campaign calls; the TRCD base/reduced arms for the whole arch set
+    share one Campaign inside ``evaluate_traces``."""
     from repro.configs import get_config
     rows = []
     d = device()
-    for arch in ("qwen2_1_5b", "rwkv6_3b"):
-        cfg = get_config(arch)
-        tr = traces.lm_decode_trace(cfg, seq_len=4096, geo=GEO, max_requests=6000)
-        r = run(tr, JETSON_NANO, "ts")
+    archs = ("qwen2_1_5b", "rwkv6_3b")
+    arch_trs = [traces.lm_decode_trace(get_config(a), seq_len=4096, geo=GEO,
+                                       max_requests=6000) for a in archs]
+    base = run_many(arch_trs, JETSON_NANO, "ts")
+    t = TRCDReduction(JETSON_NANO, d)
+    trcd = t.evaluate_traces(arch_trs)
+    for arch, r, rr in zip(archs, base, trcd):
         rows.append((f"lm_decode_trace_{arch}_cycles", int(r["exec_cycles"]),
                      f"reqs={r['n_requests']}"))
-        t = TRCDReduction(JETSON_NANO, d)
-        rr = t.evaluate_trace(tr)
         rows.append((f"lm_decode_trace_{arch}_trcd_speedup",
                      round(rr["speedup"], 4), "x"))
     # KV-page fork via RowClone vs CPU copy (serving-side case study)
     tr_rc, _ = traces.kv_fork_trace(16, 8192, GEO, "rowclone", d)
     tr_cpu, _ = traces.kv_fork_trace(16, 8192, GEO, "cpu", d)
-    a = int(run(tr_cpu, JETSON_NANO, "ts")["exec_cycles"])
-    b = int(run(tr_rc, JETSON_NANO, "ts")["exec_cycles"])
+    fork = run_many([tr_cpu, tr_rc], JETSON_NANO, "ts")
+    a, b = (int(r["exec_cycles"]) for r in fork)
     rows.append(("kv_fork_rowclone_speedup", round(a / max(b, 1), 2), "x"))
     return rows

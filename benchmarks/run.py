@@ -1,25 +1,46 @@
 """Benchmark orchestrator: one section per paper table/figure.
 
 Prints ``name,value,derived`` CSV rows. ``--quick`` trims trace sizes
-for smoke use and exits non-zero if any section fails, so it doubles as
-a CI smoke gate (``python -m benchmarks.run --quick``); ``--section
-<name>`` runs one section (e.g. ``campaign_speed`` for the batched-vs-
-looped sweep comparison).
+for smoke use and exits non-zero if any section fails OR the engine's
+steady-state speedup row (``sim_speed_steady_speedup_x``, the >=2x
+warm-cache gate at N=4000 vs the pre-optimization core) is missing or
+below gate, so it doubles as a CI smoke gate that catches throughput
+regressions (``python -m benchmarks.run --quick``). ``--section <name>``
+runs one section (e.g. ``sim_speed`` for the engine throughput gate,
+``campaign_speed`` for the batched-vs-looped sweep comparison).
+``--out <path>`` additionally writes a machine-readable BENCH_<n>.json
+(section rows + wall times + compile-cache stats) so the perf
+trajectory is tracked across PRs; ``--quick`` defaults it to
+``artifacts/BENCH_quick.json``.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+STEADY_ROW = "sim_speed_steady_speedup_x"
+STEADY_GATE = 2.0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="write section rows + wall times + cache stats "
+                         "as JSON (BENCH_<n>.json)")
     args = ap.parse_args()
 
+    # must precede the first jax computation: the XLA:CPU thunk runtime
+    # is a 30-40x steady-state slowdown on the emulator scan
+    from repro.utils.jax_compat import enable_fast_cpu_scan
+    enable_fast_cpu_scan()
+
     from benchmarks import kernels_bench, paper, roofline
+    from repro.core import emulator
 
     sections = {
         "timescale": paper.bench_timescale_validation,          # Sec. 6
@@ -42,19 +63,58 @@ def main() -> None:
                      f"choose from: {', '.join(sections)}")
         sections = {args.section: sections[args.section]}
 
+    out_path = args.out
+    if out_path is None and args.quick and not args.section:
+        # full smoke runs refresh the tracked perf-trajectory artifact;
+        # filtered runs only write JSON where --out points
+        out_path = os.path.join(os.path.dirname(__file__) or ".",
+                                "..", "artifacts", "BENCH_quick.json")
+
     print("name,value,derived")
+    report: dict = {"quick": args.quick, "argv": sys.argv[1:], "sections": {}}
     failures = 0
+    steady_value = None
     for name, fn in sections.items():
+        rows, error = [], None
         t0 = time.perf_counter()
         try:
             for row in fn():
+                rows.append(tuple(row))
                 print(",".join(str(x) for x in row))
         except Exception as e:  # pragma: no cover
             failures += 1
-            print(f"{name},ERROR,{type(e).__name__}:{e}")
-        print(f"_section_{name}_seconds,{time.perf_counter()-t0:.1f},wall",
-              flush=True)
+            error = f"{type(e).__name__}:{e}"
+            print(f"{name},ERROR,{error}")
+        dt = time.perf_counter() - t0
+        for r in rows:
+            if r[0] == STEADY_ROW:
+                steady_value = float(r[1])
+        report["sections"][name] = {
+            "rows": [list(r) for r in rows],
+            "seconds": round(dt, 2),
+            "error": error,
+        }
+        print(f"_section_{name}_seconds,{dt:.1f},wall", flush=True)
+
+    # smoke gate: the steady-state engine speedup must be present and
+    # at gate whenever the sim_speed section ran (bench_sim_speed also
+    # asserts internally; this catches the row silently disappearing)
+    if "sim_speed" in sections and not report["sections"]["sim_speed"]["error"]:
+        if steady_value is None or steady_value < STEADY_GATE:
+            failures += 1
+            print(f"_steady_gate,FAIL,{STEADY_ROW}={steady_value}")
+
+    report["cache_stats"] = emulator.cache_stats()
+    report["failures"] = failures
     print(f"_failures,{failures},smoke_gate")
+
+    if out_path:
+        out_path = os.path.abspath(out_path)
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"_report,{out_path},json")
+
     if failures:
         sys.exit(1)
 

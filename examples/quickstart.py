@@ -11,6 +11,12 @@ compiles once per group instead of once per point.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+# before any repro.core import: emulator.py creates a device constant at
+# import time, which initializes the CPU backend and locks the runtime
+from repro.utils.jax_compat import enable_fast_cpu_scan
+
+enable_fast_cpu_scan()
+
 import jax
 import jax.numpy as jnp
 import numpy as np

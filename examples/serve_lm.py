@@ -10,6 +10,12 @@ import warnings
 
 warnings.filterwarnings("ignore")
 
+# before any repro.core import: emulator.py creates a device constant at
+# import time, which initializes the CPU backend and locks the runtime
+from repro.utils.jax_compat import enable_fast_cpu_scan
+
+enable_fast_cpu_scan()
+
 import jax
 import numpy as np
 
@@ -57,12 +63,12 @@ def main():
     print("forked cache x4:",
           jax.tree_util.tree_leaves(forked)[0].shape)
 
-    # ...and the same fork's DRAM cost under the EasyDRAM engine
+    # ...and the same fork's DRAM cost under the EasyDRAM engine — both
+    # arms batched through one run_many campaign step
     dev = DeviceModel(Geometry())
     tr_rc, _ = traces.kv_fork_trace(16, 8192, Geometry(), "rowclone", dev)
     tr_cpu, _ = traces.kv_fork_trace(16, 8192, Geometry(), "cpu", dev)
-    a = emulator.run(tr_cpu, JETSON_NANO, "ts")
-    b = emulator.run(tr_rc, JETSON_NANO, "ts")
+    a, b = emulator.run_many([tr_cpu, tr_rc], JETSON_NANO, "ts")
     print(f"DRAM-level fork (16 pages): cpu={int(a['exec_cycles'])} cyc, "
           f"rowclone={int(b['exec_cycles'])} cyc "
           f"({int(a['exec_cycles'])/max(int(b['exec_cycles']),1):.1f}x)")

@@ -45,12 +45,11 @@ class Point:
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def group_key(self) -> tuple:
-        # derived from emulator.compile_key (one source of truth for
-        # bucket / mode / bloom-shape normalization), dropping the batch
-        # axis, which is unknown until run()
-        k = emulator.compile_key(emulator._bucket(self.trace.n), 1,
-                                 self.sys, self.mode, self.bloom)
-        return k[:1] + k[2:]
+        # emulator.group_key is the single source of truth for bucket /
+        # mode / bloom-shape normalization; slot budget and batch axis
+        # are derived per group inside the run_many call
+        return emulator.group_key(self.trace.n, self.sys, self.mode,
+                                  self.bloom)
 
 
 class Campaign:

@@ -8,11 +8,47 @@ command-batch execution on the bank state machine -> response tagged with
 its consume cycle -> counter advance.
 
 Each scan step performs one SMC scheduling slot (serve one visible
-request, or an idle hop to the next arrival), so ``2N + 4`` slots always
-complete an N-request trace. All arithmetic is exact int32 (DRAM ticks /
-processor cycles, fixed-point 1/4096 conversion); results are
-bit-reproducible, which is what lets the Sec. 6 validation assert exact
-invariance of time-scaled results to FPGA-side clocks.
+request, or an idle hop to the next arrival). All arithmetic is exact
+int32 (DRAM ticks / processor cycles, fixed-point 1/4096 conversion);
+results are bit-reproducible, which is what lets the Sec. 6 validation
+assert exact invariance of time-scaled results to FPGA-side clocks.
+
+Per-slot cost model (the O(Q) invariant)
+----------------------------------------
+
+The slot body does O(Q) + O(1) work, where Q = max(window, 2) is the
+hardware-queue depth — NOT O(N) in the trace length: every state update
+is a predicated point-scatter ``arr.at[i].set(where(pred, new, arr[i]))``
+(a self-write when disabled), which XLA keeps in place on the scan carry,
+and every read is a point gather. A whole trace therefore costs
+O(slots * Q), linear in the trace, where the slot count is the exact
+per-batch budget below. The pre-optimization engine (kept verbatim as
+:func:`run_ref` / ``_run_core_ref`` for A/B tests and benchmarks) instead
+paid full-length predicated selects per slot — O(bucket) work per slot,
+O(bucket^2) per trace.
+
+Slot budget
+-----------
+
+A real (non-NOP) request needs at most 2 slots (an idle hop that parks
+the MC counter at its arrival, then its serve); trailing NOP padding
+resolves in the issue frontier at 4 per slot and never enters the queue.
+(NOPs *inside* a trace inherit a latent pre-PR quirk, kept bug-for-bug
+in both engines: a NOP run that drains the hardware queue saturates the
+idle-hop counter and poisons later responses — no shipped trace
+generator emits mid-trace NOPs; see the ROADMAP open item.) For a batch
+group padded to ``bucket`` whose largest trace has R real requests, the
+scan therefore runs
+
+    slots = 2 * Rq + ceil((bucket - Rq) / 4) + 4,   Rq = R rounded up to
+                                                    a bucket/4 granule
+
+slots instead of the previous uniform ``2 * bucket + 4``. Rounding R up
+to a coarse granule (and folding ``slots`` into the compile key) keeps
+nearby batch shapes on one cached executable; the extra slots are no-ops
+(the scan is idempotent once every request is served), so results are
+bit-identical for any budget at or above the exact one — asserted by the
+property tests against the reference engine.
 
 Entry points:
 
@@ -23,15 +59,28 @@ Entry points:
   scan over that axis (optionally over per-trace Bloom filters too), so
   a whole sweep shares ONE compile and ONE device dispatch. Compiled
   executables are cached at module level keyed on
-  ``(bucket, batch, sys, mode, bloom-shape)`` — repeated sweeps never
-  recompile (see :func:`cache_stats`). Results are bit-identical to
-  per-trace :func:`run`: the batch axis only vectorizes the same exact
-  int32 arithmetic. For grids that also vary ``SystemConfig`` /
-  technique, drive this through :class:`repro.core.campaign.Campaign`.
+  ``(bucket, slots, batch, sys, mode, bloom-shape)`` — repeated sweeps
+  never recompile (see :func:`cache_stats`). Trace buffers are donated
+  to the executable (they are rebuilt from host arrays each call).
+  Results are bit-identical to per-trace :func:`run`. For grids that
+  also vary ``SystemConfig`` / technique, drive this through
+  :class:`repro.core.campaign.Campaign`.
+* :func:`run_ref` / :func:`run_ref_many` — the pre-optimization
+  O(bucket)-per-slot engine, kept only to pin bit-exactness and to
+  measure the steady-state speedup in ``benchmarks/run.py --section
+  sim_speed``.
+
+Note on XLA:CPU: the thunk runtime (jaxlib >= 0.4.32 default) executes
+the tiny per-slot ops of this scan through its intra-op thread pool and
+defeats in-place carry updates — a ~30x steady-state slowdown. Benchmark
+and example entry points call
+:func:`repro.utils.jax_compat.enable_fast_cpu_scan` before the backend
+initializes to select the legacy inline runtime.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import List, Optional, Sequence, Union
 
 import jax
@@ -45,7 +94,6 @@ from repro.core.timescale import SystemConfig
 
 BIG = jnp.int32(2 ** 30)
 FP = 4096  # fixed-point denominator for tick<->cycle conversion
-
 
 def _mul_div(a, num, den):
     """Exact a * num // den without int32 overflow (num, den ~ 1e3..1e4)."""
@@ -67,6 +115,11 @@ class Trace:
     def n(self):
         return int(self.kind.shape[0])
 
+    @property
+    def n_real(self):
+        """Non-NOP request count — input to :func:`slot_budget`."""
+        return int((np.asarray(self.kind) != NOP).sum())
+
     @staticmethod
     def of(kind, bank, row, delta, dep=None):
         kind = np.asarray(kind, np.int32)
@@ -86,7 +139,11 @@ def _issue_frontier(t_issue, t_resp, queue, kindj, delta, dep, ptr, W, upto=4):
     """Advance the in-order issue pointer by up to ``upto`` requests,
     pushing them into free hardware-queue slots. ``queue`` holds request
     indices (-1 = free); occupancy can never exceed the window W because
-    issue is in-order with W outstanding."""
+    issue is in-order with W outstanding.
+
+    O(1) work per advance: point gathers plus predicated point-scatters
+    (``arr.at[i].set(where(can, new, arr[i]))`` — a self-write when the
+    advance is disabled), never full-length selects."""
     N = t_issue.shape[0]
     for _ in range(upto):
         j = ptr
@@ -105,18 +162,21 @@ def _issue_frontier(t_issue, t_resp, queue, kindj, delta, dep, ptr, W, upto=4):
         is_nop = kindj[jc] == 4  # NOP padding: resolve instantly, skip queue
         can = (j < N) & win_known & dep_known & (jnp.any(free) | is_nop)
         t_new = jnp.maximum(jnp.maximum(base, win_t), dep_t)
-        t_issue = jnp.where(can, t_issue.at[jc].set(t_new), t_issue)
-        t_resp = jnp.where(can & is_nop, t_resp.at[jc].set(t_new), t_resp)
-        queue = jnp.where(can & ~is_nop, queue.at[slot].set(jc), queue)
+        t_issue = t_issue.at[jc].set(jnp.where(can, t_new, t_issue[jc]))
+        t_resp = t_resp.at[jc].set(jnp.where(can & is_nop, t_new, t_resp[jc]))
+        queue = queue.at[slot].set(jnp.where(can & ~is_nop, jc, queue[slot]))
         ptr = jnp.where(can, ptr + 1, ptr)
     return t_issue, t_resp, queue, ptr
 
 
 def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
-              bloom_words, bloom_k: int, bloom_m: int):
+              bloom_words, bloom_k: int, bloom_m: int,
+              slots: Optional[int] = None):
     """One trace's scan body. Pure traceable function (jit/vmap applied
     by the compile cache below); ``sys``/``mode``/``bloom_k``/``bloom_m``
-    are Python-level constants baked into the compiled program."""
+    and the ``slots`` budget are Python-level constants baked into the
+    compiled program. Every per-slot state update is a predicated point
+    gather/scatter — O(Q)+O(1) work per slot (see module docstring)."""
     N = kind.shape[0]
     t = sys.timing
     geo = sys.geometry
@@ -200,10 +260,24 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         resp_t = jnp.maximum(resp_t, decision_t + mc_issue)
 
         state = dict(state)
-        state["bank"] = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(do, b, a), state["bank"], nbs)
-        state["t_resp"] = jnp.where(do, t_resp.at[pick].set(resp_t), t_resp)
-        queue = jnp.where(do, queue.at[qslot].set(-1), queue)
+        # bank state advances only at index b: merge the served bank's row
+        # of the transition (plus the channel scalars) as predicated point
+        # writes instead of whole-array selects
+        b = bankj[pick]
+        bs = state["bank"]
+        state["bank"] = {
+            "open_row": bs["open_row"].at[b].set(
+                jnp.where(do, nbs["open_row"][b], bs["open_row"][b])),
+            "ready": bs["ready"].at[b].set(
+                jnp.where(do, nbs["ready"][b], bs["ready"][b])),
+            "act_at": bs["act_at"].at[b].set(
+                jnp.where(do, nbs["act_at"][b], bs["act_at"][b])),
+            "bus_busy": jnp.where(do, nbs["bus_busy"], bs["bus_busy"]),
+            "refs_done": jnp.where(do, nbs["refs_done"], bs["refs_done"]),
+        }
+        state["t_resp"] = t_resp.at[pick].set(
+            jnp.where(do, resp_t, t_resp[pick]))
+        queue = queue.at[qslot].set(jnp.where(do, -1, queue[qslot]))
         state["dram_now"] = jnp.where(do, jnp.maximum(state["dram_now"], dram_req_t),
                                       state["dram_now"])
         state["hits"] = state["hits"] + jnp.where(do & hit, 1, 0)
@@ -219,9 +293,156 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         state["t_issue"], state["queue"], state["ptr"] = t_issue, queue, ptr
         return state, None
 
-    state, _ = jax.lax.scan(slot, state, None, length=2 * N + 4)
+    length = (2 * N + 4) if slots is None else slots
+    state, _ = jax.lax.scan(slot, state, None, length=length)
     # trailing frontier pass so post-memory compute counts
     t_issue, _, _, ptr = _issue_frontier(
+        state["t_issue"], state["t_resp"], state["queue"],
+        kindj, deltaj, depj, state["ptr"], W, upto=8)
+    valid = kindj != NOP
+    served_mask = state["t_resp"] < BIG
+    last_resp = jnp.max(jnp.where(valid & served_mask, state["t_resp"], 0))
+    last_issue = jnp.max(jnp.where(valid, t_issue, 0))
+    return {
+        "exec_cycles": jnp.maximum(last_resp, last_issue),
+        "row_hits": state["hits"],
+        "served": state["served_n"],
+        "dram_ticks": state["dram_now"],
+        "smc_fpga_cycles": state["smc_fpga_cycles"],
+        "t_resp": state["t_resp"],
+        "t_issue": t_issue,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Reference engine: the pre-optimization core, verbatim. O(bucket) work
+# per slot (full-length predicated selects), uniform 2*bucket+4 budget.
+# Kept ONLY to pin bit-exactness (tests/test_property.py) and to measure
+# the steady-state speedup (benchmarks --section sim_speed). Do not use
+# for new work.
+# ---------------------------------------------------------------------------
+
+
+def _issue_frontier_ref(t_issue, t_resp, queue, kindj, delta, dep, ptr, W,
+                        upto=4):
+    N = t_issue.shape[0]
+    for _ in range(upto):
+        j = ptr
+        jc = jnp.clip(j, 0, N - 1)
+        prev_issue = jnp.where(j > 0, t_issue[jnp.clip(j - 1, 0, N - 1)], 0)
+        base = prev_issue + delta[jc]
+        wj = j - W
+        win_known = (wj < 0) | (t_resp[jnp.clip(wj, 0, N - 1)] < BIG)
+        win_t = jnp.where(wj >= 0, t_resp[jnp.clip(wj, 0, N - 1)] + 1, 0)
+        dj = j - dep[jc]
+        dep_on = dep[jc] > 0
+        dep_known = (~dep_on) | (dj < 0) | (t_resp[jnp.clip(dj, 0, N - 1)] < BIG)
+        dep_t = jnp.where(dep_on & (dj >= 0), t_resp[jnp.clip(dj, 0, N - 1)] + 1, 0)
+        free = queue < 0
+        slot = jnp.argmax(free).astype(jnp.int32)
+        is_nop = kindj[jc] == 4
+        can = (j < N) & win_known & dep_known & (jnp.any(free) | is_nop)
+        t_new = jnp.maximum(jnp.maximum(base, win_t), dep_t)
+        t_issue = jnp.where(can, t_issue.at[jc].set(t_new), t_issue)
+        t_resp = jnp.where(can & is_nop, t_resp.at[jc].set(t_new), t_resp)
+        queue = jnp.where(can & ~is_nop, queue.at[slot].set(jc), queue)
+        ptr = jnp.where(can, ptr + 1, ptr)
+    return t_issue, t_resp, queue, ptr
+
+
+def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
+                  bloom_words, bloom_k: int, bloom_m: int):
+    N = kind.shape[0]
+    t = sys.timing
+    geo = sys.geometry
+    W = sys.window
+    frfcfs = sys.scheduler == "frfcfs"
+    use_bloom = bloom_words is not None
+
+    scale_num = jnp.int32(round((sys.proc_per_tick_fpga if mode == "nots"
+                                 else sys.proc_per_tick_emu) * FP))
+    mc_issue = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots"
+                         else sys.hwmc_issue_proc)
+    mc_lat = jnp.int32(0 if mode == "nots" else sys.hwmc_latency_proc)
+    vis_slack = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots" else 0)
+
+    Q = max(W, 2)
+    state = {
+        "bank": dram.init_bank_state(geo),
+        "t_issue": jnp.zeros((N,), jnp.int32),
+        "t_resp": jnp.full((N,), BIG, jnp.int32),
+        "queue": jnp.full((Q,), -1, jnp.int32),
+        "ptr": jnp.int32(0),
+        "mc_release": jnp.int32(0),
+        "dram_now": jnp.int32(0),
+        "hits": jnp.int32(0),
+        "served_n": jnp.int32(0),
+        "smc_fpga_cycles": jnp.int32(0),
+    }
+
+    kindj, bankj, rowj, deltaj, depj = kind, bank, row, delta, dep
+
+    def slot(state, _):
+        t_issue, t_resp = state["t_issue"], state["t_resp"]
+        t_issue, t_resp, queue, ptr = _issue_frontier_ref(
+            t_issue, t_resp, state["queue"], kindj, deltaj, depj,
+            state["ptr"], W)
+
+        qvalid = queue >= 0
+        qidx = jnp.clip(queue, 0, N - 1)
+        q_t = jnp.where(qvalid, t_issue[qidx], BIG)
+        q_bank = bankj[qidx]
+        q_row = rowj[qidx]
+
+        cutoff = state["mc_release"] + vis_slack
+        visible = qvalid & (q_t <= cutoff)
+        do = jnp.any(visible)
+
+        open_rows = state["bank"]["open_row"]
+        hit_now = open_rows[q_bank] == q_row
+        key_all = jnp.where(visible, q_t, BIG)
+        key_hit = jnp.where(visible & hit_now, q_t, BIG)
+        slot_hit = jnp.argmin(key_hit).astype(jnp.int32)
+        slot_old = jnp.argmin(key_all).astype(jnp.int32)
+        use_hit = frfcfs & jnp.any(visible & hit_now)
+        qslot = jnp.where(use_hit, slot_hit, slot_old)
+        pick = qidx[qslot]
+
+        decision_t = jnp.maximum(t_issue[pick], state["mc_release"])
+        dram_req_t = jnp.maximum(state["dram_now"],
+                                 _mul_div(decision_t, FP, jnp.maximum(scale_num, 1)))
+        trcd_eff = jnp.int32(t.tRCD)
+        if use_bloom:
+            gid = (bankj[pick] * geo.n_rows + rowj[pick]).astype(jnp.uint32)
+            weakp = bloom_probe_jnp(bloom_words, bloom_m, bloom_k, gid[None])[0]
+            trcd_eff = jnp.where(weakp, jnp.int32(t.tRCD), jnp.int32(t.tRCD_reduced))
+        nbs, t_done, hit = dram.service_request(
+            state["bank"], t, kindj[pick], bankj[pick], rowj[pick],
+            dram_req_t, trcd_eff)
+
+        resp_t = _mul_div(t_done, scale_num, FP) + mc_lat
+        resp_t = jnp.maximum(resp_t, decision_t + mc_issue)
+
+        state = dict(state)
+        state["bank"] = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(do, b, a), state["bank"], nbs)
+        state["t_resp"] = jnp.where(do, t_resp.at[pick].set(resp_t), t_resp)
+        queue = jnp.where(do, queue.at[qslot].set(-1), queue)
+        state["dram_now"] = jnp.where(do, jnp.maximum(state["dram_now"], dram_req_t),
+                                      state["dram_now"])
+        state["hits"] = state["hits"] + jnp.where(do & hit, 1, 0)
+        state["served_n"] = state["served_n"] + jnp.where(do, 1, 0)
+        state["smc_fpga_cycles"] = state["smc_fpga_cycles"] + jnp.where(
+            do, sys.smc_cycles_per_decision + sys.smc_transfer_cycles, 0)
+        nxt = jnp.min(q_t)
+        state["mc_release"] = jnp.where(
+            do, jnp.maximum(state["mc_release"], decision_t + mc_issue),
+            jnp.maximum(state["mc_release"], jnp.minimum(nxt, BIG - 1)))
+        state["t_issue"], state["queue"], state["ptr"] = t_issue, queue, ptr
+        return state, None
+
+    state, _ = jax.lax.scan(slot, state, None, length=2 * N + 4)
+    t_issue, _, _, ptr = _issue_frontier_ref(
         state["t_issue"], state["t_resp"], state["queue"],
         kindj, deltaj, depj, state["ptr"], W, upto=8)
     valid = kindj != NOP
@@ -252,10 +473,28 @@ def pad_trace(tr: Trace, n: int) -> Trace:
 
 
 def _bucket(n: int) -> int:
-    b = 256
+    b = 32
     while b < n:
         b *= 2
     return b
+
+
+def slot_budget(bucket: int, n_real: int) -> int:
+    """Exact scan-slot budget for a batch group padded to ``bucket``
+    whose largest trace has ``n_real`` non-NOP requests:
+
+        2 * Rq + ceil((bucket - Rq) / 4) + 4
+
+    with Rq = n_real rounded up to a ``max(bucket // 4, 8)`` granule
+    (capped at bucket). Real requests cost at most 2 slots each (idle
+    hop + serve, with issue piggybacking on earlier slots); NOPs resolve
+    4 per slot in the frontier and never enter the queue. The budget is
+    monotone in n_real, so the group max covers every member; surplus
+    slots are no-ops, keeping results bit-identical to any larger
+    budget (2*bucket+4 degenerate case included)."""
+    g = max(bucket // 4, 8)
+    rq = min(bucket, -(-n_real // g) * g)
+    return 2 * rq + (bucket - rq + 3) // 4 + 4
 
 
 def _batch_bucket(b: int) -> int:
@@ -288,21 +527,38 @@ def _is_bloom_triple(b) -> bool:
             and np.ndim(b[1]) == 0 and np.ndim(b[2]) == 0)
 
 
-def compile_key(bucket: int, batch: int, sys: SystemConfig, mode: str,
-                blooms) -> tuple:
-    """Cache key for one batched executable. ``blooms`` is None, one
-    shared (words, k, m_bits) filter, or a per-trace sequence of
-    identically-shaped triples — shared-vs-stacked decided by content
-    (like :func:`_normalize_blooms`), not container type."""
+def _bloom_shape(blooms) -> Optional[tuple]:
+    """Shape signature of a blooms argument: None, one shared (words, k,
+    m_bits) filter, or a per-trace sequence of identically-shaped
+    triples — shared-vs-stacked decided by content (like
+    :func:`_normalize_blooms`), not container type."""
     if blooms is None:
-        bshape = None
-    elif _is_bloom_triple(blooms):
-        bshape = ("shared", int(np.asarray(blooms[0]).shape[0]),
-                  blooms[1], blooms[2])
-    else:
-        b0 = tuple(blooms[0])
-        bshape = ("stacked", int(np.asarray(b0[0]).shape[0]), b0[1], b0[2])
-    return (bucket, _batch_bucket(batch), sys, _norm_mode(mode), bshape)
+        return None
+    if _is_bloom_triple(blooms):
+        return ("shared", int(np.asarray(blooms[0]).shape[0]),
+                blooms[1], blooms[2])
+    b0 = tuple(blooms[0])
+    return ("stacked", int(np.asarray(b0[0]).shape[0]), b0[1], b0[2])
+
+
+def group_key(n: int, sys: SystemConfig, mode: str, blooms) -> tuple:
+    """Grouping key for one trace-length-n point: everything a batched
+    executable is specialized on EXCEPT the batch axis and slot budget,
+    which only exist once a group is assembled (run_many derives them
+    per group). One source of truth with :func:`compile_key` for the
+    bucket / mode / bloom-shape normalization — used by
+    :class:`repro.core.campaign.Campaign`."""
+    return (_bucket(n), sys, _norm_mode(mode), _bloom_shape(blooms))
+
+
+def compile_key(bucket: int, batch: int, sys: SystemConfig, mode: str,
+                blooms, slots: Optional[int] = None) -> tuple:
+    """Cache key for one batched executable (see :func:`_bloom_shape`
+    for the ``blooms`` normalization). ``slots`` is the group's
+    :func:`slot_budget` (None for the uniform-budget reference
+    engine)."""
+    return (bucket, slots, _batch_bucket(batch), sys, _norm_mode(mode),
+            _bloom_shape(blooms))
 
 
 def cache_stats() -> dict:
@@ -317,19 +573,24 @@ def cache_clear() -> None:
     _CACHE_STATS["misses"] = 0
 
 
-def _batched_fn(key: tuple):
-    """Jitted vmapped runner for one compile key; built once per key."""
-    fn = _COMPILE_CACHE.get(key)
+def _batched_fn(key: tuple, ref: bool = False):
+    """Jitted vmapped runner for one compile key; built once per key.
+    ``ref=True`` builds the pre-optimization reference engine (no slot
+    budget, no donation) on a separate cache entry."""
+    ckey = ("ref", key) if ref else key
+    fn = _COMPILE_CACHE.get(ckey)
     if fn is not None:
         _CACHE_STATS["hits"] += 1
         return fn
     _CACHE_STATS["misses"] += 1
-    _, _, sys, mode, bshape = key
+    _, slots, _, sys, mode, bshape = key
+    core = _run_core_ref if ref else _run_core
+    extra = {} if ref else {"slots": slots}
 
     if bshape is None:
         def fn(kind, bank, row, delta, dep):
-            return jax.vmap(lambda k, b, r, d, dp: _run_core(
-                k, b, r, d, dp, sys, mode, None, 0, 1))(
+            return jax.vmap(lambda k, b, r, d, dp: core(
+                k, b, r, d, dp, sys, mode, None, 0, 1, **extra))(
                 kind, bank, row, delta, dep)
     else:
         stacked, _, bk, bm = bshape
@@ -337,13 +598,26 @@ def _batched_fn(key: tuple):
 
         def fn(kind, bank, row, delta, dep, words):
             return jax.vmap(
-                lambda k, b, r, d, dp, w: _run_core(
-                    k, b, r, d, dp, sys, mode, w, bk, bm),
+                lambda k, b, r, d, dp, w: core(
+                    k, b, r, d, dp, sys, mode, w, bk, bm, **extra),
                 in_axes=(0, 0, 0, 0, 0, words_axis))(
                 kind, bank, row, delta, dep, words)
 
-    fn = jax.jit(fn)
-    _COMPILE_CACHE[key] = fn
+    # trace arrays are freshly staged from host memory every call, so the
+    # executable may reuse their buffers for its outputs (bloom words can
+    # be caller-shared jnp arrays -> not donated); donation is best-effort
+    # by design, so the inputs-not-aliased warning is pure noise
+    if ref:
+        fn = jax.jit(fn)
+    else:
+        jitted = jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4))
+
+        def fn(*a, _jitted=jitted):
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                return _jitted(*a)
+    _COMPILE_CACHE[ckey] = fn
     return fn
 
 
@@ -383,22 +657,11 @@ def _normalize_blooms(blooms, n: int):
     return blooms
 
 
-def run_many(traces: Sequence[Trace], sys: SystemConfig,
-             mode: Union[str, Sequence[str]] = "ts",
-             blooms=None) -> List[dict]:
-    """Evaluate many traces under one ``SystemConfig`` in batched calls.
-
-    ``mode`` is one of 'ts' | 'nots' | 'reference', or a per-trace
-    sequence of them. ``blooms`` is None, one shared ``(words, k,
-    m_bits)`` tuple, or a per-trace list of identically-shaped tuples
-    (stacked and vmapped alongside the traces).
-
-    Traces are grouped by ``(length-bucket, mode)``; each group pads to
-    its bucket, pads the batch axis to a power of two with all-NOP
-    traces, and executes as ONE vmapped, jit-cached call. Returns one
-    dict per input trace, in input order, bit-identical to
-    ``run(trace, sys, mode, bloom)``.
-    """
+def _run_grouped(traces: Sequence[Trace], sys: SystemConfig,
+                 mode: Union[str, Sequence[str]], blooms,
+                 ref: bool) -> List[dict]:
+    """Shared grouped-execution path for :func:`run_many` (exact slot
+    budgets) and :func:`run_ref_many` (uniform reference budgets)."""
     traces = list(traces)
     n = len(traces)
     modes = [mode] * n if isinstance(mode, str) else list(mode)
@@ -421,8 +684,10 @@ def run_many(traces: Sequence[Trace], sys: SystemConfig,
         stacked = [jnp.asarray(np.stack([getattr(p, f) for p in padded]))
                    for f in ("kind", "bank", "row", "delta", "dep")]
 
-        key = compile_key(bucket, len(idxs), sys, gmode, blooms)
-        fn = _batched_fn(key)
+        slots = None if ref else slot_budget(
+            bucket, max(traces[i].n_real for i in idxs))
+        key = compile_key(bucket, len(idxs), sys, gmode, blooms, slots)
+        fn = _batched_fn(key, ref=ref)
         if blooms is None:
             out = fn(*stacked)
         elif isinstance(blooms, tuple):
@@ -440,6 +705,35 @@ def run_many(traces: Sequence[Trace], sys: SystemConfig,
     return results
 
 
+def run_many(traces: Sequence[Trace], sys: SystemConfig,
+             mode: Union[str, Sequence[str]] = "ts",
+             blooms=None) -> List[dict]:
+    """Evaluate many traces under one ``SystemConfig`` in batched calls.
+
+    ``mode`` is one of 'ts' | 'nots' | 'reference', or a per-trace
+    sequence of them. ``blooms`` is None, one shared ``(words, k,
+    m_bits)`` tuple, or a per-trace list of identically-shaped tuples
+    (stacked and vmapped alongside the traces).
+
+    Traces are grouped by ``(length-bucket, mode)``; each group pads to
+    its bucket, pads the batch axis to a power of two with all-NOP
+    traces, computes its exact :func:`slot_budget` from the largest
+    member, and executes as ONE vmapped, jit-cached call (trace buffers
+    donated). Returns one dict per input trace, in input order,
+    bit-identical to ``run(trace, sys, mode, bloom)``.
+    """
+    return _run_grouped(traces, sys, mode, blooms, ref=False)
+
+
+def run_ref_many(traces: Sequence[Trace], sys: SystemConfig,
+                 mode: Union[str, Sequence[str]] = "ts",
+                 blooms=None) -> List[dict]:
+    """The pre-optimization engine over the same grouped/batched path:
+    O(bucket) work per slot, uniform ``2*bucket+4`` budget. Kept for
+    bit-exactness property tests and the sim_speed steady-state A/B."""
+    return _run_grouped(traces, sys, mode, blooms, ref=True)
+
+
 def run(trace: Trace, sys: SystemConfig, mode: str = "ts",
         bloom: Optional[tuple] = None) -> dict:
     """mode: 'ts' | 'nots' | 'reference'. bloom: (words_u32, k, m_bits).
@@ -454,3 +748,10 @@ def run(trace: Trace, sys: SystemConfig, mode: str = "ts",
     """
     assert mode in ("ts", "nots", "reference")
     return run_many([trace], sys, mode=mode, blooms=bloom)[0]
+
+
+def run_ref(trace: Trace, sys: SystemConfig, mode: str = "ts",
+            bloom: Optional[tuple] = None) -> dict:
+    """Single-trace wrapper over :func:`run_ref_many` (see there)."""
+    assert mode in ("ts", "nots", "reference")
+    return run_ref_many([trace], sys, mode=mode, blooms=bloom)[0]

@@ -20,7 +20,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import emulator, traces
+from repro.core import traces
 from repro.core.campaign import Campaign
 from repro.core.bloom import BloomFilter
 from repro.core.dram import Geometry
@@ -63,29 +63,32 @@ class RowClone:
                        cpu_line_delta: int = None) -> List[dict]:
         """Sweep ``sizes`` in one batched campaign: all (cpu, rowclone)
         trace pairs run through a single ``run_many`` call per
-        compile-key group instead of one compile per point. Returns one
+        compile-key group — one compile and one dispatch per (bucket,
+        slot-budget) group, with the short RowClone traces paying only
+        their exact slot budget rather than the CPU arm's. Returns one
         {'cpu': ..., 'rowclone': ...} dict per size, in order."""
         gen = traces.copy_workload if workload == "copy" else traces.init_workload
         kw = {} if cpu_line_delta is None else {"cpu_line_delta": cpu_line_delta}
         sizes = list(sizes)
-        pairs, metas = [], []
-        for nb in sizes:
-            for mode in ("cpu", "rowclone"):
-                tr, meta = gen(nb, self.geo, mode=mode, device=self.device,
+        c = Campaign()
+        fallbacks = {}
+        for j, nb in enumerate(sizes):  # positional index: duplicate sizes
+            for arm in ("cpu", "rowclone"):   # stay independent evaluations
+                tr, meta = gen(nb, self.geo, mode=arm, device=self.device,
                                setting=setting, **kw)
-                pairs.append(tr)
-                metas.append(meta)
-        runs = emulator.run_many(pairs, self.sys, mode=mode_ts)
+                c.add(tr, self.sys, mode=mode_ts, j=j, arm=arm)
+                fallbacks[(j, arm)] = meta["fallback_rows"]
+        recs = {(r["j"], r["arm"]): r for r in c.run()}
         out = []
-        for j, nb in enumerate(sizes):  # positional: duplicate sizes stay
-            d = {}                      # independent evaluations
-            for off, mode in enumerate(("cpu", "rowclone")):
-                r = runs[2 * j + off]
-                d[mode] = RowCloneResult(
-                    mode=mode, setting=setting, n_bytes=nb,
+        for j, nb in enumerate(sizes):
+            d = {}
+            for arm in ("cpu", "rowclone"):
+                r = recs[(j, arm)]
+                d[arm] = RowCloneResult(
+                    mode=arm, setting=setting, n_bytes=nb,
                     exec_cycles=int(r["exec_cycles"]),
                     exec_seconds=r["exec_seconds"],
-                    fallback_rows=metas[2 * j + off]["fallback_rows"])
+                    fallback_rows=fallbacks[(j, arm)])
             d["rowclone"].speedup_vs_cpu = \
                 d["cpu"].exec_cycles / max(d["rowclone"].exec_cycles, 1)
             out.append(d)

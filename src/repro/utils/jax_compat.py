@@ -18,9 +18,13 @@ Every call site goes through these helpers instead of probing
 * :func:`cost_analysis_dict` — ``Compiled.cost_analysis()`` normalized
   to one flat dict. Depending on version it returns a dict, a list with
   one dict per partition, or None.
+* :func:`enable_fast_cpu_scan` — select the XLA:CPU runtime that keeps
+  the emulator's long scalar-carry scans fast (see docstring). Call it
+  at process entry, before the first jax computation.
 """
 from __future__ import annotations
 
+import os
 from typing import Any, Dict
 
 import jax
@@ -45,6 +49,53 @@ def pvary(x, axis_names):
     if hasattr(jax.lax, "pcast"):
         return jax.lax.pcast(x, axis_names, to="varying")
     return x  # old shard_map: no varying-ness tracking (check_rep=False)
+
+
+def enable_fast_cpu_scan() -> bool:
+    """Select the XLA:CPU runtime that keeps long scalar-carry scans fast.
+
+    The thunk runtime (jaxlib >= 0.4.32 default) executes each of the
+    ~100 tiny ops in the emulator's scan body through its intra-op
+    thread pool and defeats in-place dynamic-update-slice on the scan
+    carry; for an 8k-slot emulation that is ~30 us of synchronization
+    per slot — a 30-40x steady-state slowdown on the batched engine
+    (measured in ``benchmarks/run.py --section sim_speed``). The legacy
+    inline runtime has neither problem. Matmul-heavy model code is
+    unaffected either way (both dispatch to Eigen).
+
+    Must run before the CPU backend is created: returns True when the
+    flag is (now) in effect for future compilations, False when the
+    backend already initialized without it (too late — results are
+    still correct, just slower). No-op off-CPU and when the operator
+    already pinned the flag via ``XLA_FLAGS``. Known caveat: the legacy
+    runtime does not populate per-op ``cost_analysis()`` metrics, so
+    flops-accounting tools (``repro.launch.dryrun``) should not run
+    under it.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_cpu_use_thunk_runtime" in flags:
+        if "xla_cpu_use_thunk_runtime=false" in flags:
+            return True  # operator already pinned the fast runtime
+        import warnings
+        warnings.warn(
+            "XLA_FLAGS pins xla_cpu_use_thunk_runtime on — emulation "
+            "scans will run ~30x slower steady-state", stacklevel=2)
+        return False
+    try:
+        from jax._src import xla_bridge
+        if xla_bridge._backends:  # backend exists; flag would be ignored
+            import warnings
+            warnings.warn(
+                "enable_fast_cpu_scan() called after the JAX backend "
+                "initialized (e.g. after importing repro.core.emulator) — "
+                "emulation scans will run on the slow thunk runtime; call "
+                "it before any repro.core import", stacklevel=2)
+            return False
+    except (ImportError, AttributeError):  # pragma: no cover - API moved
+        pass
+    os.environ["XLA_FLAGS"] = \
+        (flags + " --xla_cpu_use_thunk_runtime=false").strip()
+    return True
 
 
 def cost_analysis_dict(compiled) -> Dict[str, float]:

@@ -58,6 +58,58 @@ def test_rules_divisibility_never_violated(logical, size):
 
 
 @settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 48),
+       st.sampled_from([1, 2, 4]), st.sampled_from(["frfcfs", "fcfs"]),
+       st.sampled_from(["ts", "nots", "reference"]))
+def test_fast_core_bit_identical_to_reference(seed, n, window, sched, mode):
+    """The O(Q)-per-slot engine with exact slot budgets must reproduce
+    the kept pre-optimization engine (`emulator.run_ref`) bit-for-bit:
+    randomized traces (all request kinds incl. mid-trace NOPs and
+    RowClone ops, random deps) x mode x window/scheduler, at trace
+    lengths straddling the padded bucket boundaries — and batching the
+    same trace through `run_many` must change nothing either."""
+    import dataclasses
+    from repro.core import emulator
+    rng = np.random.RandomState(seed % (2 ** 31))
+    tr = emulator.Trace.of(
+        kind=rng.randint(0, 5, n), bank=rng.randint(0, 16, n),
+        row=rng.randint(0, 4096, n), delta=rng.randint(0, 24, n),
+        dep=rng.randint(0, 3, n))
+    sysc = dataclasses.replace(JETSON_NANO, window=window, scheduler=sched)
+    a = run(tr, sysc, mode)
+    b = emulator.run_ref(tr, sysc, mode)
+    c = emulator.run_many([tr, tr], sysc, mode)[1]
+    for k in ("exec_cycles", "row_hits", "served", "dram_ticks",
+              "smc_fpga_cycles"):
+        assert int(a[k]) == int(b[k]) == int(c[k]), k
+    np.testing.assert_array_equal(a["t_resp"], b["t_resp"])
+    np.testing.assert_array_equal(a["t_issue"], b["t_issue"])
+    np.testing.assert_array_equal(a["t_resp"], c["t_resp"])
+    np.testing.assert_array_equal(a["t_issue"], c["t_issue"])
+    assert a["avg_load_latency_cycles"] == b["avg_load_latency_cycles"]
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([31, 32, 33, 63, 64]))
+def test_fast_core_reference_with_bloom(seed, n):
+    """Same bit-identity contract on the Bloom-filter (reduced-tRCD)
+    arm, pinned to bucket-boundary lengths."""
+    from repro.core import emulator
+    rng = np.random.RandomState(seed % (2 ** 31))
+    bf = BloomFilter.build(rng.randint(0, 1 << 19, 100).astype(np.uint32),
+                           m_bits=1 << 14, k=3)
+    bloom = (bf.bits, bf.k, bf.m_bits)
+    tr = emulator.Trace.of(
+        kind=rng.randint(0, 2, n), bank=rng.randint(0, 16, n),
+        row=rng.randint(0, 4096, n), delta=rng.randint(1, 8, n),
+        dep=rng.randint(0, 2, n))
+    a = run(tr, JETSON_NANO, "ts", bloom=bloom)
+    b = emulator.run_ref(tr, JETSON_NANO, "ts", bloom=bloom)
+    assert int(a["exec_cycles"]) == int(b["exec_cycles"])
+    np.testing.assert_array_equal(a["t_resp"], b["t_resp"])
+
+
+@settings(max_examples=10, deadline=None)
 @given(st.integers(0, 1000))
 def test_emulator_deterministic(seed):
     rng = np.random.RandomState(seed)
