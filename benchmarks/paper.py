@@ -342,6 +342,83 @@ def bench_campaign_speed(n_traces=16, n_requests=180):
     ]
 
 
+# ---------------- policy subsystem: software-defined scheduler sweep ----------------
+
+def bench_policy_sweep(n_traces=8, n_requests=1200):
+    """The MC-policy VM benchmark, two claims per run.
+
+    (1) Interpreter overhead: the built-in FR-FCFS *program* (policy VM
+    inside the scan) vs the hard-coded ``sys.scheduler`` branch, same
+    traces, both warm — the VM stages to near-identical XLA, so the
+    steady-state ratio must stay <= 1.3x (``run.py`` fails the run on
+    the ``policy_sweep_interp_overhead_x`` row, same mechanism as the
+    sim_speed gate). Correctness is asserted bit-exactly first.
+
+    (2) Policy grid through Campaign: every built-in program over a
+    bursty multi-bank workload in ONE Campaign — one compiled
+    executable and one batched dispatch per program group (asserted on
+    the compile-cache counters), with ts-mode results invariant to each
+    program's length-derived SMC cost."""
+    rng = np.random.RandomState(23)
+    trs = []
+    for _ in range(n_traces):
+        # bursty arrivals keep several requests visible per decision,
+        # so scheduling policy actually has choices to make
+        delta = np.where(np.arange(n_requests) % 8 == 0, 400, 0)
+        row = np.where(rng.rand(n_requests) < 0.6, 7,
+                       rng.randint(0, 4096, n_requests))
+        trs.append(Trace.of(kind=rng.randint(0, 2, n_requests),
+                            bank=rng.randint(0, 4, n_requests),
+                            row=row, delta=delta))
+    from repro.core import smcprog
+    sys_hard = dataclasses.replace(JETSON_NANO, window=8)
+    sys_prog = dataclasses.replace(sys_hard,
+                                   policy=smcprog.frfcfs_program())
+
+    out_hard = run_many(trs, sys_hard, "ts")  # warm both executables
+    out_prog = run_many(trs, sys_prog, "ts")
+    for a, b in zip(out_hard, out_prog):
+        assert int(a["exec_cycles"]) == int(b["exec_cycles"]), \
+            "policy VM frfcfs diverged from the hard-coded scheduler"
+        np.testing.assert_array_equal(a["t_resp"], b["t_resp"])
+    t_hard, _ = _timed_median(lambda: run_many(trs, sys_hard, "ts"))
+    t_prog, _ = _timed_median(lambda: run_many(trs, sys_prog, "ts"))
+    overhead = t_prog / max(t_hard, 1e-9)
+
+    rows = [
+        ("policy_sweep_hardcoded_s", round(t_hard, 3),
+         f"{n_traces}x{n_requests}_reqs_warm"),
+        ("policy_sweep_vm_frfcfs_s", round(t_prog, 3), "policy_vm_scan"),
+        # gate enforcement (<=1.3x) lives in benchmarks/run.py
+        ("policy_sweep_interp_overhead_x", round(overhead, 3),
+         "accept<=1.3x"),
+    ]
+
+    # (2) the policy grid: all built-ins, one batched dispatch per group
+    emulator.cache_clear()
+    programs = list(smcprog.builtin_programs().values())
+    c = Campaign()
+    for i, tr in enumerate(trs[:2]):
+        c.add_policy_grid(tr, sys_hard, programs, mode="ts", i=i)
+    recs = c.run()
+    stats = emulator.cache_stats()
+    assert c.n_groups() == len(programs), \
+        f"{c.n_groups()} groups for {len(programs)} programs"
+    assert stats["misses"] == len(programs), \
+        f"compiled {stats['misses']} times for {len(programs)} program groups"
+    by = {(r["i"], r["policy"]): r for r in recs}
+    base = {i: int(by[(i, "frfcfs")]["exec_cycles"]) for i in range(2)}
+    for p in programs:
+        execs = [int(by[(i, p.name)]["exec_cycles"]) for i in range(2)]
+        rel = float(np.mean([base[i] / max(e, 1)
+                             for i, e in enumerate(execs)]))
+        rows.append((f"policy_sweep_{p.name}_vs_frfcfs", round(rel, 4),
+                     f"smc_cycles={p.smc_cycles()}"))
+    rows.append(("policy_sweep_grid_compiles", stats["misses"],
+                 f"one_per_program_group_of_{len(programs)}"))
+    return rows
+
+
 # ---------------- LM x EasyDRAM: the framework tie-in ----------------
 
 def bench_lm_traces():

@@ -1,13 +1,16 @@
 """Benchmark orchestrator: one section per paper table/figure.
 
 Prints ``name,value,derived`` CSV rows. ``--quick`` trims trace sizes
-for smoke use and exits non-zero if any section fails OR the engine's
-steady-state speedup row (``sim_speed_steady_speedup_x``, the >=2x
-warm-cache gate at N=4000 vs the pre-optimization core) is missing or
-below gate, so it doubles as a CI smoke gate that catches throughput
+for smoke use and exits non-zero if any section fails OR a perf gate
+row is missing/out of range: the engine's steady-state speedup
+(``sim_speed_steady_speedup_x``, >=2x warm-cache at N=4000 vs the
+pre-optimization core) and the MC-policy-VM interpreter overhead
+(``policy_sweep_interp_overhead_x``, <=1.3x vs the hard-coded
+scheduler) — so it doubles as a CI smoke gate that catches throughput
 regressions (``python -m benchmarks.run --quick``). ``--section <name>``
 runs one section (e.g. ``sim_speed`` for the engine throughput gate,
-``campaign_speed`` for the batched-vs-looped sweep comparison).
+``campaign_speed`` for the batched-vs-looped sweep comparison,
+``policy_sweep`` for the policy-VM overhead gate and built-in grid).
 ``--out <path>`` additionally writes a machine-readable BENCH_<n>.json
 (section rows + wall times + compile-cache stats) so the perf
 trajectory is tracked across PRs; ``--quick`` defaults it to
@@ -23,6 +26,8 @@ import time
 
 STEADY_ROW = "sim_speed_steady_speedup_x"
 STEADY_GATE = 2.0
+POLICY_ROW = "policy_sweep_interp_overhead_x"
+POLICY_GATE = 1.3  # policy-VM scan must stay within 1.3x of hard-coded
 
 
 def main() -> None:
@@ -53,6 +58,8 @@ def main() -> None:
         "sim_speed": paper.bench_sim_speed,                     # Fig. 14
         "campaign_speed": (lambda: paper.bench_campaign_speed(3))
         if args.quick else paper.bench_campaign_speed,          # run_many
+        "policy_sweep": (lambda: paper.bench_policy_sweep(4, 400))
+        if args.quick else paper.bench_policy_sweep,            # MC-policy VM
         "lm_traces": paper.bench_lm_traces,                     # framework tie-in
         "kernels": kernels_bench.bench_kernels,
         "roofline": lambda: roofline.csv_rows(roofline.load_records("sp")),
@@ -74,6 +81,7 @@ def main() -> None:
     report: dict = {"quick": args.quick, "argv": sys.argv[1:], "sections": {}}
     failures = 0
     steady_value = None
+    policy_value = None
     for name, fn in sections.items():
         rows, error = [], None
         t0 = time.perf_counter()
@@ -89,6 +97,8 @@ def main() -> None:
         for r in rows:
             if r[0] == STEADY_ROW:
                 steady_value = float(r[1])
+            if r[0] == POLICY_ROW:
+                policy_value = float(r[1])
         report["sections"][name] = {
             "rows": [list(r) for r in rows],
             "seconds": round(dt, 2),
@@ -103,6 +113,13 @@ def main() -> None:
         if steady_value is None or steady_value < STEADY_GATE:
             failures += 1
             print(f"_steady_gate,FAIL,{STEADY_ROW}={steady_value}")
+    # policy-VM gate: interpreting a scheduling program inside the scan
+    # must stay within POLICY_GATE of the hard-coded scheduler
+    if "policy_sweep" in sections \
+            and not report["sections"]["policy_sweep"]["error"]:
+        if policy_value is None or policy_value > POLICY_GATE:
+            failures += 1
+            print(f"_policy_gate,FAIL,{POLICY_ROW}={policy_value}")
 
     report["cache_stats"] = emulator.cache_stats()
     report["failures"] = failures

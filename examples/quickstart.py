@@ -70,6 +70,19 @@ def main():
         print(f"  {r['kernel']:>10s} {r['mode']:>4s}: "
               f"{int(r['exec_cycles']):>9d} cycles")
 
+    # scheduling policies are software too (see examples/policy_lab.py
+    # for the full lab): author one, cost it, run it
+    from repro.core.smcprog import PolicyBuilder
+    b = PolicyBuilder()
+    prog = b.build(score=b.score_age(), boost=b.score_row_hit(),
+                   name="my-frfcfs")
+    tr, _ = traces.polybench_trace(traces.POLYBENCH[0], geo,
+                                   max_accesses=2000, seed=0)
+    from repro.core.emulator import run
+    r = run(tr, JETSON_NANO.with_policy(prog), "ts")
+    print(f"\npolicy {prog.name} ({prog.smc_cycles()} smc-cycles/decision): "
+          f"{int(r['exec_cycles'])} cycles")
+
 
 if __name__ == "__main__":
     main()

@@ -24,6 +24,13 @@ Usage::
 Results are bit-identical to looping ``emulator.run`` over the points —
 the batch axis only vectorizes the same exact int32 arithmetic — but a
 sweep compiles at most once per group and dispatches once per group.
+
+Policy sweeps (PR 4) are one more grid axis: :meth:`Campaign.add_policy_grid`
+fans a trace out across a set of :class:`repro.core.smcprog.PolicyProgram`
+schedulers. Programs hash by instruction-table content, so each distinct
+program forms its own compile-key group (one batched dispatch per
+program), while same-content programs — and repeated traces under one
+program — share a group.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 from repro.core import emulator
 from repro.core.emulator import Trace
+from repro.core.smcprog import PolicyProgram
 from repro.core.timescale import SystemConfig
 
 
@@ -79,6 +87,26 @@ class Campaign:
             f"metas ({len(metas)}) must match traces ({len(traces)})"
         for tr, m in zip(traces, metas):
             self.add(tr, sys, mode, bloom, **m)
+        return self
+
+    def add_policy_grid(self, trace: Trace, sys: SystemConfig,
+                        programs: Sequence[PolicyProgram], mode: str = "ts",
+                        derive_cost: bool = True, **meta) -> "Campaign":
+        """Fan ``trace`` out across a grid of policy programs (one point
+        per program; each record carries ``policy=<program name>`` plus
+        ``meta``). ``derive_cost=True`` routes through
+        ``sys.with_policy`` so each program's decision cost follows its
+        length — the ``ts`` vs ``nots`` SMC-slowness experiment;
+        ``derive_cost=False`` keeps ``sys``'s cost for bit-comparable
+        scheduling-only sweeps."""
+        names = [p.name for p in programs]
+        assert len(set(names)) == len(names), \
+            f"policy grid needs unique program names (records key on " \
+            f"them), got {sorted(names)}"
+        for prog in programs:
+            sysc = sys.with_policy(prog) if derive_cost \
+                else dataclasses.replace(sys, policy=prog)
+            self.add(trace, sysc, mode, policy=prog.name, **meta)
         return self
 
     def __len__(self) -> int:

@@ -3,9 +3,20 @@
 One fused ``lax.scan`` implements the whole request lifetime of Fig. 6:
 processor issue (bounded-window in-order front end) -> hardware request
 buffer -> SMC critical mode (visibility cutoff on the time-scaling
-counter) -> scheduling decision (FR-FCFS/FCFS) -> DRAM-Bender-style
-command-batch execution on the bank state machine -> response tagged with
-its consume cycle -> counter advance.
+counter) -> scheduling decision -> DRAM-Bender-style command-batch
+execution on the bank state machine -> response tagged with its consume
+cycle -> counter advance.
+
+The scheduling decision is software-defined: when ``sys.policy`` is a
+:class:`repro.core.smcprog.PolicyProgram`, its instruction table is
+interpreted inside the slot body by the branchless policy VM
+(O(program-length * Q) extra work per slot, preserving the O(Q)
+invariant below); otherwise the legacy hard-coded ``sys.scheduler``
+FR-FCFS/FCFS branch runs. The built-in FR-FCFS/FCFS programs are
+bit-identical to the legacy flag (tests/test_smcprog.py). The program's
+content rides in the compile key through ``SystemConfig`` (programs
+hash by table content), so policy sweeps group per program in
+:func:`run_many` / ``Campaign``.
 
 Each scan step performs one SMC scheduling slot (serve one visible
 request, or an idle hop to the next arrival). All arithmetic is exact
@@ -31,12 +42,13 @@ Slot budget
 -----------
 
 A real (non-NOP) request needs at most 2 slots (an idle hop that parks
-the MC counter at its arrival, then its serve); trailing NOP padding
-resolves in the issue frontier at 4 per slot and never enters the queue.
-(NOPs *inside* a trace inherit a latent pre-PR quirk, kept bug-for-bug
-in both engines: a NOP run that drains the hardware queue saturates the
-idle-hop counter and poisons later responses — no shipped trace
-generator emits mid-trace NOPs; see the ROADMAP open item.) For a batch
+the MC counter at its arrival, then its serve); NOPs (mid-trace or
+trailing padding) resolve in the issue frontier at 4 per slot and never
+enter the queue. (The idle hop is skipped outright while the hardware
+queue is empty — e.g. during a mid-trace NOP run that drains it — so
+the MC counter stays parked instead of saturating to BIG-1; the
+pre-PR-4 engines saturated there and poisoned every later response.
+Both engines carry the fix identically.) For a batch
 group padded to ``bucket`` whose largest trace has R real requests, the
 scan therefore runs
 
@@ -87,9 +99,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dram
+from repro.core import dram, smcprog
 from repro.core.bloom import bloom_probe_jnp
-from repro.core.dram import NOP
+from repro.core.dram import NOP, WRITE
 from repro.core.timescale import SystemConfig
 
 BIG = jnp.int32(2 ** 30)
@@ -100,6 +112,30 @@ def _mul_div(a, num, den):
     q = a // den
     r = a - q * den
     return q * num + (r * num) // den
+
+
+def _policy_env(q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
+                bank_ready, dram_now, last_bank, n_banks: int, Q: int):
+    """Scheduling environment for the policy VM: one thunk per load op,
+    each returning a [Q] int32 vector. :func:`smcprog.evaluate` calls
+    only the thunks the program references (and each at most once), so
+    an FR-FCFS program pays for exactly the two vectors the hard-coded
+    scheduler already computed. Shared by both engine cores so the
+    policy semantics cannot drift between them."""
+    is_write = lambda: (kindj[qidx] == WRITE).astype(jnp.int32)  # noqa: E731
+    return {
+        "age": lambda: q_t,
+        "age_rel": lambda: q_t - jnp.min(jnp.where(visible, q_t, BIG)),
+        "row_hit": lambda: hit_now.astype(jnp.int32),
+        "bank": lambda: q_bank,
+        "row": lambda: q_row,
+        "is_write": is_write,
+        "bank_busy": lambda: (bank_ready[q_bank] > dram_now).astype(jnp.int32),
+        "rr_dist": lambda: (q_bank - last_bank - 1) % jnp.int32(n_banks),
+        "qslot": lambda: jnp.arange(Q, dtype=jnp.int32),
+        "write_pressure": lambda: jnp.zeros((Q,), jnp.int32) + jnp.sum(
+            (visible & (is_write() != 0)).astype(jnp.int32)),
+    }
 
 
 @dataclasses.dataclass
@@ -182,6 +218,7 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
     geo = sys.geometry
     W = sys.window
     frfcfs = sys.scheduler == "frfcfs"
+    policy = sys.policy
     use_bloom = bloom_words is not None
 
     # proc cycles per DRAM tick, fixed-point /FP
@@ -207,6 +244,7 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         "hits": jnp.int32(0),
         "served_n": jnp.int32(0),
         "smc_fpga_cycles": jnp.int32(0),
+        "last_bank": jnp.int32(-1),     # bank of the last served request
     }
 
     kindj, bankj, rowj, deltaj, depj = kind, bank, row, delta, dep
@@ -228,15 +266,23 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         visible = qvalid & (q_t <= cutoff)
         do = jnp.any(visible)
 
-        # ---- scheduling policy (int32-safe two-level argmin) ----
+        # ---- scheduling decision (int32-safe two-level argmin) ----
         open_rows = state["bank"]["open_row"]
         hit_now = open_rows[q_bank] == q_row
-        key_all = jnp.where(visible, q_t, BIG)
-        key_hit = jnp.where(visible & hit_now, q_t, BIG)
-        slot_hit = jnp.argmin(key_hit).astype(jnp.int32)
-        slot_old = jnp.argmin(key_all).astype(jnp.int32)
-        use_hit = frfcfs & jnp.any(visible & hit_now)
-        qslot = jnp.where(use_hit, slot_hit, slot_old)
+        if policy is not None:
+            # software-defined path: the policy VM stages the program's
+            # instruction table into branchless O(Q) vector ops here
+            qslot = smcprog.select_slot(policy, _policy_env(
+                q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
+                state["bank"]["ready"], state["dram_now"],
+                state["last_bank"], geo.n_banks, Q), visible)
+        else:
+            key_all = jnp.where(visible, q_t, BIG)
+            key_hit = jnp.where(visible & hit_now, q_t, BIG)
+            slot_hit = jnp.argmin(key_hit).astype(jnp.int32)
+            slot_old = jnp.argmin(key_all).astype(jnp.int32)
+            use_hit = frfcfs & jnp.any(visible & hit_now)
+            qslot = jnp.where(use_hit, slot_hit, slot_old)
         pick = qidx[qslot]
 
         # ---- DRAM service (command-batch executor) ----
@@ -284,12 +330,19 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         state["served_n"] = state["served_n"] + jnp.where(do, 1, 0)
         state["smc_fpga_cycles"] = state["smc_fpga_cycles"] + jnp.where(
             do, sys.smc_cycles_per_decision + sys.smc_transfer_cycles, 0)
-        # MC busy until the next decision slot; idle hop to the next arrival
-        # when nothing is visible
+        state["last_bank"] = jnp.where(do, bankj[pick], state["last_bank"])
+        # MC busy until the next decision slot; idle hop to the next
+        # arrival when nothing is visible — but only when something is
+        # queued: hopping on an empty queue (mid-trace NOP run) would
+        # saturate the counter to BIG-1 and poison every later response
+        # (the pre-PR-4 idle-hop quirk)
         nxt = jnp.min(q_t)
+        idle = jnp.where(
+            jnp.any(qvalid),
+            jnp.maximum(state["mc_release"], jnp.minimum(nxt, BIG - 1)),
+            state["mc_release"])
         state["mc_release"] = jnp.where(
-            do, jnp.maximum(state["mc_release"], decision_t + mc_issue),
-            jnp.maximum(state["mc_release"], jnp.minimum(nxt, BIG - 1)))
+            do, jnp.maximum(state["mc_release"], decision_t + mc_issue), idle)
         state["t_issue"], state["queue"], state["ptr"] = t_issue, queue, ptr
         return state, None
 
@@ -315,11 +368,14 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
 
 
 # ---------------------------------------------------------------------------
-# Reference engine: the pre-optimization core, verbatim. O(bucket) work
-# per slot (full-length predicated selects), uniform 2*bucket+4 budget.
-# Kept ONLY to pin bit-exactness (tests/test_property.py) and to measure
-# the steady-state speedup (benchmarks --section sim_speed). Do not use
-# for new work.
+# Reference engine: the pre-optimization core. O(bucket) work per slot
+# (full-length predicated selects), uniform 2*bucket+4 budget. Kept ONLY
+# to pin bit-exactness (tests/test_property.py) and to measure the
+# steady-state speedup (benchmarks --section sim_speed). Do not use for
+# new work. Semantic changes are forbidden EXCEPT the ones the fast core
+# must stay bit-identical under: the PR-4 policy-VM branch, the
+# last_bank carry it reads, and the idle-hop empty-queue fix — all
+# mirrored line-for-line from _run_core.
 # ---------------------------------------------------------------------------
 
 
@@ -357,6 +413,7 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
     geo = sys.geometry
     W = sys.window
     frfcfs = sys.scheduler == "frfcfs"
+    policy = sys.policy
     use_bloom = bloom_words is not None
 
     scale_num = jnp.int32(round((sys.proc_per_tick_fpga if mode == "nots"
@@ -378,6 +435,7 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         "hits": jnp.int32(0),
         "served_n": jnp.int32(0),
         "smc_fpga_cycles": jnp.int32(0),
+        "last_bank": jnp.int32(-1),
     }
 
     kindj, bankj, rowj, deltaj, depj = kind, bank, row, delta, dep
@@ -400,12 +458,18 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
 
         open_rows = state["bank"]["open_row"]
         hit_now = open_rows[q_bank] == q_row
-        key_all = jnp.where(visible, q_t, BIG)
-        key_hit = jnp.where(visible & hit_now, q_t, BIG)
-        slot_hit = jnp.argmin(key_hit).astype(jnp.int32)
-        slot_old = jnp.argmin(key_all).astype(jnp.int32)
-        use_hit = frfcfs & jnp.any(visible & hit_now)
-        qslot = jnp.where(use_hit, slot_hit, slot_old)
+        if policy is not None:
+            qslot = smcprog.select_slot(policy, _policy_env(
+                q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
+                state["bank"]["ready"], state["dram_now"],
+                state["last_bank"], geo.n_banks, Q), visible)
+        else:
+            key_all = jnp.where(visible, q_t, BIG)
+            key_hit = jnp.where(visible & hit_now, q_t, BIG)
+            slot_hit = jnp.argmin(key_hit).astype(jnp.int32)
+            slot_old = jnp.argmin(key_all).astype(jnp.int32)
+            use_hit = frfcfs & jnp.any(visible & hit_now)
+            qslot = jnp.where(use_hit, slot_hit, slot_old)
         pick = qidx[qslot]
 
         decision_t = jnp.maximum(t_issue[pick], state["mc_release"])
@@ -434,10 +498,15 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         state["served_n"] = state["served_n"] + jnp.where(do, 1, 0)
         state["smc_fpga_cycles"] = state["smc_fpga_cycles"] + jnp.where(
             do, sys.smc_cycles_per_decision + sys.smc_transfer_cycles, 0)
+        state["last_bank"] = jnp.where(do, bankj[pick], state["last_bank"])
+        # idle-hop fix mirrored from _run_core: never hop on an empty queue
         nxt = jnp.min(q_t)
+        idle = jnp.where(
+            jnp.any(qvalid),
+            jnp.maximum(state["mc_release"], jnp.minimum(nxt, BIG - 1)),
+            state["mc_release"])
         state["mc_release"] = jnp.where(
-            do, jnp.maximum(state["mc_release"], decision_t + mc_issue),
-            jnp.maximum(state["mc_release"], jnp.minimum(nxt, BIG - 1)))
+            do, jnp.maximum(state["mc_release"], decision_t + mc_issue), idle)
         state["t_issue"], state["queue"], state["ptr"] = t_issue, queue, ptr
         return state, None
 
@@ -556,7 +625,10 @@ def compile_key(bucket: int, batch: int, sys: SystemConfig, mode: str,
     """Cache key for one batched executable (see :func:`_bloom_shape`
     for the ``blooms`` normalization). ``slots`` is the group's
     :func:`slot_budget` (None for the uniform-budget reference
-    engine)."""
+    engine). ``sys`` carries the policy program, which hashes by
+    instruction-table content (digest semantics): same-content programs
+    share one executable, distinct programs fork the key — so a policy
+    grid runs one batched dispatch per program."""
     return (bucket, slots, _batch_bucket(batch), sys, _norm_mode(mode),
             _bloom_shape(blooms))
 

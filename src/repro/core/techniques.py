@@ -5,7 +5,9 @@ paper's accessibility claim, reproduced. ``RowClone`` handles the four
 allocation constraints (alignment / granularity / subarray mapping /
 coherence) with profiling-driven fallback; ``TRCDReduction`` runs the
 two-stage characterize -> Bloom-filter flow and hands the filter to the
-engine, which consults it on every row activation.
+engine, which consults it on every row activation;
+``SchedulingPolicyStudy`` sweeps software-defined scheduler programs
+(``repro.core.smcprog``) across workloads with length-derived SMC costs.
 
 Evaluation goes through the batched campaign path
 (``emulator.run_many`` / ``campaign.Campaign``): ``evaluate_batch`` /
@@ -16,15 +18,16 @@ one dispatch per compile-key group; the single-point ``evaluate`` /
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import traces
+from repro.core import smcprog, traces
 from repro.core.campaign import Campaign
 from repro.core.bloom import BloomFilter
 from repro.core.dram import Geometry
 from repro.core.profiling import DeviceModel
+from repro.core.smcprog import PolicyProgram
 from repro.core.timescale import SystemConfig
 
 
@@ -91,6 +94,70 @@ class RowClone:
                     fallback_rows=fallbacks[(j, arm)])
             d["rowclone"].speedup_vs_cpu = \
                 d["cpu"].exec_cycles / max(d["rowclone"].exec_cycles, 1)
+            out.append(d)
+        return out
+
+
+class SchedulingPolicyStudy:
+    """Scheduling policies as software — the paper's first key idea,
+    turned into a technique-style sweep. A study takes a grid of
+    :class:`~repro.core.smcprog.PolicyProgram` schedulers (default: all
+    built-ins) and evaluates every (trace x policy x mode) point through
+    one batched :class:`Campaign` — one compiled executable and one
+    dispatch per program group.
+
+    Two cost treatments, matching the paper's ts/nots axis:
+
+    * ``derive_cost=True`` (default) — each program's SMC decision cost
+      follows its length (``with_policy``), so ``nots`` records expose
+      how a longer policy program slows the free-running system while
+      ``ts`` records stay invariant to it (time scaling hides SMC
+      slowness — the claim itself).
+    * ``derive_cost=False`` — all programs keep ``sys``'s cost; results
+      isolate pure scheduling quality.
+    """
+
+    def __init__(self, sys: SystemConfig,
+                 programs: Optional[Sequence[PolicyProgram]] = None,
+                 baseline: str = "frfcfs"):
+        self.sys = sys
+        self.programs = list(programs) if programs is not None \
+            else list(smcprog.builtin_programs().values())
+        assert self.programs, "need at least one policy program"
+        names = [p.name for p in self.programs]
+        assert len(set(names)) == len(names), \
+            f"program names must be unique (results key on them), " \
+            f"got {sorted(names)}"
+        self.baseline = baseline
+
+    def evaluate_traces(self, trs: Sequence, mode: str = "ts",
+                        derive_cost: bool = True) -> List[Dict]:
+        """Returns one dict per trace, in input order:
+        ``{policy_name: {exec_cycles, row_hits, smc_cycles,
+        speedup_vs_baseline}}``."""
+        c = Campaign()
+        for i, tr in enumerate(trs):
+            c.add_policy_grid(tr, self.sys, self.programs, mode=mode,
+                              derive_cost=derive_cost, i=i)
+        recs = {(r["i"], r["policy"]): r for r in c.run()}
+        cost = {p.name: p.smc_cycles() if derive_cost
+                else self.sys.smc_cycles_per_decision for p in self.programs}
+        out: List[Dict] = []
+        for i in range(len(trs)):
+            d = {}
+            base = None
+            if any(p.name == self.baseline for p in self.programs):
+                base = int(recs[(i, self.baseline)]["exec_cycles"])
+            for p in self.programs:
+                r = recs[(i, p.name)]
+                e = int(r["exec_cycles"])
+                d[p.name] = {
+                    "exec_cycles": e,
+                    "row_hits": int(r["row_hits"]),
+                    "smc_cycles": cost[p.name],
+                    "speedup_vs_baseline":
+                        (base / max(e, 1)) if base is not None else 1.0,
+                }
             out.append(d)
         return out
 

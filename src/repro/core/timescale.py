@@ -24,8 +24,10 @@ platform's clocks, so one engine expresses all three evaluation modes:
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.core.dram import TCK_NS, Geometry, Timing
+from repro.core.smcprog import PolicyProgram
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,7 +46,15 @@ class SystemConfig:
     # DRAM
     timing: Timing = dataclasses.field(default_factory=Timing)
     geometry: Geometry = dataclasses.field(default_factory=Geometry)
-    scheduler: str = "frfcfs"           # frfcfs | fcfs
+    scheduler: str = "frfcfs"           # frfcfs | fcfs (legacy string path)
+    # software-defined scheduling: a repro.core.smcprog.PolicyProgram
+    # evaluated inside the scan slot body. When set it REPLACES the
+    # `scheduler` flag for the scheduling decision; it is content-hashed,
+    # so it folds into the emulator compile key / Campaign grouping
+    # through this config. Attach via with_policy() to also derive the
+    # decision cost from program length, or dataclasses.replace() to
+    # keep this config's cost (what the bit-identity tests do).
+    policy: Optional[PolicyProgram] = None
 
     # ---- derived conversion helpers (proc cycles per DRAM tick etc.) ----
     @property
@@ -69,6 +79,13 @@ class SystemConfig:
         fpga_ns = (self.smc_cycles_per_decision + self.smc_transfer_cycles) \
             / (self.f_mc_fpga_mhz * 1e-3)
         return int(round(fpga_ns * self.f_proc_fpga_mhz * 1e-3))
+
+    def with_policy(self, prog: PolicyProgram) -> "SystemConfig":
+        """Attach a policy program AND derive the SMC decision cost from
+        its length (``prog.smc_cycles()`` — the modeled software-MC
+        slowness that time scaling hides and ``nots`` exposes)."""
+        return dataclasses.replace(self, policy=prog,
+                                   smc_cycles_per_decision=prog.smc_cycles())
 
     def dram_ticks_to_proc(self, ticks, mode: str):
         if mode == "nots":

@@ -20,7 +20,8 @@ Every call site goes through these helpers instead of probing
   one dict per partition, or None.
 * :func:`enable_fast_cpu_scan` — select the XLA:CPU runtime that keeps
   the emulator's long scalar-carry scans fast (see docstring). Call it
-  at process entry, before the first jax computation.
+  at process entry, before the first jax computation; calling it after
+  the backend initialized raises (the flag would be silently ignored).
 """
 from __future__ import annotations
 
@@ -64,13 +65,16 @@ def enable_fast_cpu_scan() -> bool:
     unaffected either way (both dispatch to Eigen).
 
     Must run before the CPU backend is created: returns True when the
-    flag is (now) in effect for future compilations, False when the
-    backend already initialized without it (too late — results are
-    still correct, just slower). No-op off-CPU and when the operator
-    already pinned the flag via ``XLA_FLAGS``. Known caveat: the legacy
-    runtime does not populate per-op ``cost_analysis()`` metrics, so
-    flops-accounting tools (``repro.launch.dryrun``) should not run
-    under it.
+    flag is (now) in effect for future compilations, and raises
+    ``RuntimeError`` when the backend already initialized without it —
+    the flag would be silently ignored and every emulation scan would
+    quietly run ~30x slower, so a late call is a programming error (fix
+    the call order), not a condition to limp past. Returns False only
+    when the operator explicitly pinned the thunk runtime on via
+    ``XLA_FLAGS`` (their call; warn and respect it). Known caveat: the
+    legacy runtime does not populate per-op ``cost_analysis()``
+    metrics, so flops-accounting tools (``repro.launch.dryrun``)
+    should not run under it.
     """
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_cpu_use_thunk_runtime" in flags:
@@ -83,16 +87,17 @@ def enable_fast_cpu_scan() -> bool:
         return False
     try:
         from jax._src import xla_bridge
-        if xla_bridge._backends:  # backend exists; flag would be ignored
-            import warnings
-            warnings.warn(
-                "enable_fast_cpu_scan() called after the JAX backend "
-                "initialized (e.g. after importing repro.core.emulator) — "
-                "emulation scans will run on the slow thunk runtime; call "
-                "it before any repro.core import", stacklevel=2)
-            return False
+        backend_up = bool(xla_bridge._backends)
     except (ImportError, AttributeError):  # pragma: no cover - API moved
-        pass
+        backend_up = False
+    if backend_up:  # flag would be silently ignored — refuse loudly
+        raise RuntimeError(
+            "enable_fast_cpu_scan() called after the JAX backend "
+            "initialized (e.g. after importing repro.core.emulator or "
+            "running any jax computation) — the XLA_FLAGS it sets would "
+            "be ignored and emulation scans would run on the slow thunk "
+            "runtime. Call it first thing at process entry, before any "
+            "repro.core import.")
     os.environ["XLA_FLAGS"] = \
         (flags + " --xla_cpu_use_thunk_runtime=false").strip()
     return True

@@ -197,12 +197,12 @@ class TestSlotBudget:
     def test_mid_trace_nops_match_reference(self):
         """NOP runs inside the trace (not just padding) stress the
         frontier's NOP resolution and the budget's sufficiency
-        accounting. This pins ENGINE EQUIVALENCE only: mid-trace NOP
-        runs that drain the hardware queue hit a latent pre-PR quirk
-        (idle-hop counter saturates, later responses poisoned) that
-        both engines reproduce bug-for-bug — no shipped generator
-        emits mid-trace NOPs; fixing the quirk (ROADMAP open item)
-        must update BOTH engines to keep this identity."""
+        accounting. Re-baselined in PR 4 to the corrected idle-hop
+        behavior: the idle hop is skipped while the hardware queue is
+        empty (both engines changed together), so a NOP run that drains
+        the queue no longer saturates mc_release to BIG-1 — every real
+        request now completes with a sane response tag, and the two
+        engines must still agree bit-for-bit."""
         rng = np.random.RandomState(7)
         n = 60
         kind = rng.randint(0, 2, n)
@@ -216,6 +216,10 @@ class TestSlotBudget:
         np.testing.assert_array_equal(a["t_resp"], b["t_resp"])
         np.testing.assert_array_equal(a["t_issue"], b["t_issue"])
         assert int(a["served"]) == int(b["served"])
+        # corrected behavior: no response poisoning, everything serves
+        real = kind != 4
+        assert int(a["served"]) == int(real.sum())
+        assert (np.asarray(a["t_resp"])[:n][real] < int(emulator.BIG)).all()
 
     @pytest.mark.parametrize("mode,window,sched", [
         ("ts", 1, "frfcfs"), ("nots", 4, "frfcfs"),

@@ -109,6 +109,40 @@ def test_fast_core_reference_with_bloom(seed, n):
     np.testing.assert_array_equal(a["t_resp"], b["t_resp"])
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 48),
+       st.sampled_from([1, 2, 4]), st.sampled_from(["frfcfs", "fcfs"]),
+       st.sampled_from(["ts", "nots", "reference"]))
+def test_policy_program_bit_identical_to_legacy(seed, n, window, sched, mode):
+    """The built-in FR-FCFS/FCFS policy programs (the MC-policy VM
+    inside the scan) must reproduce the legacy `sys.scheduler` string
+    path bit-for-bit — and `run` == `run_many` == `run_ref` must keep
+    holding with a policy attached — across randomized traces (all
+    request kinds incl. mid-trace NOPs, random deps), windows, and
+    modes."""
+    import dataclasses
+    from repro.core import emulator, smcprog
+    rng = np.random.RandomState(seed % (2 ** 31))
+    tr = Trace.of(kind=rng.randint(0, 5, n), bank=rng.randint(0, 16, n),
+                  row=rng.randint(0, 4096, n), delta=rng.randint(0, 24, n),
+                  dep=rng.randint(0, 3, n))
+    prog = (smcprog.frfcfs_program() if sched == "frfcfs"
+            else smcprog.fcfs_program())
+    sys_leg = dataclasses.replace(JETSON_NANO, window=window, scheduler=sched)
+    sys_prog = dataclasses.replace(sys_leg, policy=prog)
+    a = run(tr, sys_leg, mode)
+    b = run(tr, sys_prog, mode)
+    c = emulator.run_many([tr, tr], sys_prog, mode)[1]
+    d = emulator.run_ref(tr, sys_prog, mode)
+    for k in ("exec_cycles", "row_hits", "served", "dram_ticks",
+              "smc_fpga_cycles"):
+        assert int(a[k]) == int(b[k]) == int(c[k]) == int(d[k]), k
+    np.testing.assert_array_equal(a["t_resp"], b["t_resp"])
+    np.testing.assert_array_equal(a["t_issue"], b["t_issue"])
+    np.testing.assert_array_equal(a["t_resp"], c["t_resp"])
+    np.testing.assert_array_equal(a["t_resp"], d["t_resp"])
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 1000))
 def test_emulator_deterministic(seed):
