@@ -1,0 +1,57 @@
+"""Child process for ``benchmarks --section executor_speed``'s
+persistent-compile-cache claim: run a small heterogeneous sweep from a
+COLD in-process state against the on-disk XLA cache dir given as argv[1],
+then print one JSON line with the persistent-cache counters, results,
+and wall time. The parent runs this twice: the first process populates
+the cache (misses > 0), the second must load every executable from disk
+(hits > 0, misses == 0) — i.e. a fresh process re-running a known sweep
+skips the cold compiles entirely.
+
+Kept as its own entry point (not ``python -c``) so the sweep stays in
+one reviewable place and the cache keys cannot drift between the two
+invocations.
+"""
+import json
+import os
+import sys
+import time
+
+
+def main() -> None:
+    cache_dir = sys.argv[1]
+    n = int(sys.argv[2]) if len(sys.argv) > 2 else 400
+
+    # order matters: both must precede the first jax computation
+    from repro.utils.jax_compat import (enable_fast_cpu_scan,
+                                        enable_persistent_compile_cache,
+                                        persistent_cache_stats)
+    enable_fast_cpu_scan()
+    enable_persistent_compile_cache(cache_dir)
+
+    import numpy as np
+
+    from repro.core.emulator import Trace, run_many
+    from repro.core.timescale import JETSON_NANO
+
+    rng = np.random.RandomState(17)
+
+    def mk(m):
+        return Trace.of(kind=rng.randint(0, 2, m), bank=rng.randint(0, 16, m),
+                        row=rng.randint(0, 4096, m),
+                        delta=rng.randint(1, 8, m), dep=rng.randint(0, 2, m))
+
+    # two length buckets x two modes -> four compile-key groups
+    trs = [mk(n), mk(n + 8), mk(2 * n), mk(2 * n + 8)]
+    modes = ["ts", "nots", "ts", "nots"]
+    t0 = time.perf_counter()
+    out = run_many(trs, JETSON_NANO, modes)
+    wall = time.perf_counter() - t0
+    print(json.dumps({
+        "exec": [int(r["exec_cycles"]) for r in out],
+        "pcache": persistent_cache_stats(),
+        "wall_s": round(wall, 2),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,9 +12,14 @@ runs one section (e.g. ``sim_speed`` for the engine throughput gate,
 ``campaign_speed`` for the batched-vs-looped sweep comparison,
 ``policy_sweep`` for the policy-VM overhead gate and built-in grid).
 ``--out <path>`` additionally writes a machine-readable BENCH_<n>.json
-(section rows + wall times + compile-cache stats) so the perf
-trajectory is tracked across PRs; ``--quick`` defaults it to
-``artifacts/BENCH_quick.json``.
+(env fingerprint header + section rows + wall times + compile-cache
+stats) so the perf trajectory is tracked and comparable across PRs and
+environments; ``--quick`` defaults it to ``artifacts/BENCH_quick.json``.
+PR 5 gates (``--quick``): the overlapped campaign executor must beat
+the serial group loop >= 1.5x warm (``executor_speed_overlap_speedup_x``,
+multicore hosts), and a second process over the persistent XLA cache
+must skip every recompile (``executor_speed_pcache_second_hits`` > 0,
+``..._misses`` == 0).
 """
 from __future__ import annotations
 
@@ -28,6 +33,29 @@ STEADY_ROW = "sim_speed_steady_speedup_x"
 STEADY_GATE = 2.0
 POLICY_ROW = "policy_sweep_interp_overhead_x"
 POLICY_GATE = 1.3  # policy-VM scan must stay within 1.3x of hard-coded
+EXEC_ROW = "executor_speed_overlap_speedup_x"
+EXEC_GATE = 1.5    # overlapped executor vs serial group loop, warm cache
+PCACHE_HITS_ROW = "executor_speed_pcache_second_hits"
+PCACHE_MISSES_ROW = "executor_speed_pcache_second_misses"
+
+
+def _env_header() -> dict:
+    """Environment fingerprint for BENCH_<n>.json comparability: the
+    same rows mean different things on a different jax/jaxlib, device
+    topology, or scan runtime (see ROADMAP perf note)."""
+    import jax
+    import jaxlib
+    devs = jax.local_devices()
+    flags = os.environ.get("XLA_FLAGS", "")
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "device_count": len(devs),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "platform": devs[0].platform if devs else "none",
+        "cpu_count": os.cpu_count(),
+        "fast_cpu_scan": "xla_cpu_use_thunk_runtime=false" in flags,
+    }
 
 
 def main() -> None:
@@ -60,6 +88,8 @@ def main() -> None:
         if args.quick else paper.bench_campaign_speed,          # run_many
         "policy_sweep": (lambda: paper.bench_policy_sweep(4, 400))
         if args.quick else paper.bench_policy_sweep,            # MC-policy VM
+        "executor_speed": (lambda: paper.bench_executor_speed(6, 2000))
+        if args.quick else paper.bench_executor_speed,          # PR 5 executor
         "lm_traces": paper.bench_lm_traces,                     # framework tie-in
         "kernels": kernels_bench.bench_kernels,
         "roofline": lambda: roofline.csv_rows(roofline.load_records("sp")),
@@ -78,10 +108,10 @@ def main() -> None:
                                 "..", "artifacts", "BENCH_quick.json")
 
     print("name,value,derived")
-    report: dict = {"quick": args.quick, "argv": sys.argv[1:], "sections": {}}
+    report: dict = {"quick": args.quick, "argv": sys.argv[1:],
+                    "env": _env_header(), "sections": {}}
     failures = 0
-    steady_value = None
-    policy_value = None
+    gate_values: dict = {}
     for name, fn in sections.items():
         rows, error = [], None
         t0 = time.perf_counter()
@@ -95,16 +125,17 @@ def main() -> None:
             print(f"{name},ERROR,{error}")
         dt = time.perf_counter() - t0
         for r in rows:
-            if r[0] == STEADY_ROW:
-                steady_value = float(r[1])
-            if r[0] == POLICY_ROW:
-                policy_value = float(r[1])
+            if r[0] in (STEADY_ROW, POLICY_ROW, EXEC_ROW,
+                        PCACHE_HITS_ROW, PCACHE_MISSES_ROW):
+                gate_values[r[0]] = float(r[1])
         report["sections"][name] = {
             "rows": [list(r) for r in rows],
             "seconds": round(dt, 2),
             "error": error,
         }
         print(f"_section_{name}_seconds,{dt:.1f},wall", flush=True)
+    steady_value = gate_values.get(STEADY_ROW)
+    policy_value = gate_values.get(POLICY_ROW)
 
     # smoke gate: the steady-state engine speedup must be present and
     # at gate whenever the sim_speed section ran (bench_sim_speed also
@@ -120,6 +151,24 @@ def main() -> None:
         if policy_value is None or policy_value > POLICY_GATE:
             failures += 1
             print(f"_policy_gate,FAIL,{POLICY_ROW}={policy_value}")
+    # executor gates: (a) the overlapped group executor must beat the
+    # serial PR 4 loop warm (only meaningful with >1 hardware thread);
+    # (b) the second persistent-cache process must skip every compile
+    if "executor_speed" in sections \
+            and not report["sections"]["executor_speed"]["error"]:
+        from repro.core import executor
+        exec_value = gate_values.get(EXEC_ROW)
+        # overlap needs both hardware threads AND a multi-worker pool
+        # (REPRO_EXEC_WORKERS=1 legitimately forces the serial loop)
+        if (os.cpu_count() or 1) > 1 and executor.workers() > 1 \
+                and (exec_value is None or exec_value < EXEC_GATE):
+            failures += 1
+            print(f"_executor_gate,FAIL,{EXEC_ROW}={exec_value}")
+        hits = gate_values.get(PCACHE_HITS_ROW)
+        misses = gate_values.get(PCACHE_MISSES_ROW)
+        if not hits or misses is None or misses > 0:
+            failures += 1
+            print(f"_pcache_gate,FAIL,hits={hits},misses={misses}")
 
     report["cache_stats"] = emulator.cache_stats()
     report["failures"] = failures

@@ -24,6 +24,13 @@ Usage::
 Results are bit-identical to looping ``emulator.run`` over the points —
 the batch axis only vectorizes the same exact int32 arithmetic — but a
 sweep compiles at most once per group and dispatches once per group.
+Since PR 5 the groups themselves no longer execute serially either:
+``run()`` prepares every group and hands the batch to
+``repro.core.executor``, which overlaps host-side packing with device
+compute and runs independent groups concurrently (``run(serial=True)``
+keeps the old in-order loop for A/B). With more than one local device,
+each group's batch axis additionally shards via ``shard_map``
+(``emulator.set_sharding``).
 
 Policy sweeps (PR 4) are one more grid axis: :meth:`Campaign.add_policy_grid`
 fans a trace out across a set of :class:`repro.core.smcprog.PolicyProgram`
@@ -37,7 +44,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
-from repro.core import emulator
+from repro.core import emulator, executor
 from repro.core.emulator import Trace
 from repro.core.smcprog import PolicyProgram
 from repro.core.timescale import SystemConfig
@@ -74,7 +81,9 @@ class Campaign:
 
     def add(self, trace: Trace, sys: SystemConfig, mode: str = "ts",
             bloom: Optional[tuple] = None, **meta) -> "Campaign":
-        assert mode in ("ts", "nots", "reference")
+        # a real exception, not an assert: grid-driving scripts run
+        # under `python -O` too, where asserts vanish silently
+        emulator.check_mode(mode)
         self.points.append(Point(trace, sys, mode, bloom, meta))
         return self
 
@@ -99,10 +108,13 @@ class Campaign:
         length — the ``ts`` vs ``nots`` SMC-slowness experiment;
         ``derive_cost=False`` keeps ``sys``'s cost for bit-comparable
         scheduling-only sweeps."""
+        emulator.check_mode(mode)
         names = [p.name for p in programs]
-        assert len(set(names)) == len(names), \
-            f"policy grid needs unique program names (records key on " \
-            f"them), got {sorted(names)}"
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(
+                f"policy grid needs unique program names (records key "
+                f"on them), got duplicates {dupes}")
         for prog in programs:
             sysc = sys.with_policy(prog) if derive_cost \
                 else dataclasses.replace(sys, policy=prog)
@@ -112,17 +124,29 @@ class Campaign:
     def __len__(self) -> int:
         return len(self.points)
 
-    def run(self) -> List[dict]:
+    def run(self, serial: Optional[bool] = None) -> List[dict]:
         """Execute every point; one batched call per compile-key group.
 
-        Returns one record per point, in ``add`` order: the emulator
-        output dict plus the point's ``meta`` entries.
+        The default path prepares EVERY group up front (executable
+        lookups settle on this thread, in group order — compile-cache
+        counters are identical to the serial loop) and then runs them
+        overlapped across the ``repro.core.executor`` worker pool: the
+        host-side padding/packing of group k+1 proceeds while group k
+        is inside XLA, and independent groups execute concurrently
+        across cores. ``serial=True`` keeps the original in-order
+        group loop for A/B (``benchmarks --section executor_speed``);
+        the default (None) also falls back to it for single-group
+        campaigns or a 1-worker pool. Results are bit-identical either
+        way, in ``add`` order: the emulator output dict plus the
+        point's ``meta`` entries.
         """
         groups: Dict[tuple, List[int]] = {}
         for i, p in enumerate(self.points):
             groups.setdefault(p.group_key(), []).append(i)
 
         results: List[Optional[dict]] = [None] * len(self.points)
+        tasks: List[executor.GroupTask] = []
+        merges = []  # (campaign indices, points, per-group result list)
         for key, idxs in groups.items():
             pts = [self.points[i] for i in idxs]
             p0 = pts[0]
@@ -131,13 +155,19 @@ class Campaign:
                 # one shared filter broadcasts; distinct ones stack
                 same = all(b.bloom is p0.bloom for b in pts)
                 blooms = p0.bloom if same else [p.bloom for p in pts]
-            outs = emulator.run_many([p.trace for p in pts], p0.sys,
-                                     mode=[p.mode for p in pts],
-                                     blooms=blooms)
+            outs: List[Optional[dict]] = [None] * len(pts)
+            tasks += emulator.prepare_tasks([p.trace for p in pts], p0.sys,
+                                            [p.mode for p in pts], blooms,
+                                            outs)
+            merges.append((idxs, pts, outs))
+        executor.execute(tasks, serial=serial)
+        for idxs, pts, outs in merges:
             for p, i, out in zip(pts, idxs, outs):
                 clash = set(out) & set(p.meta)
-                assert not clash, \
-                    f"meta keys shadow emulator result fields: {sorted(clash)}"
+                if clash:  # ValueError, not assert: survives python -O
+                    raise ValueError(
+                        f"meta keys shadow emulator result fields: "
+                        f"{sorted(clash)}")
                 results[i] = {**out, **p.meta}
         return results
 

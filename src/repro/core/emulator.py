@@ -72,11 +72,18 @@ Entry points:
   a whole sweep shares ONE compile and ONE device dispatch. Compiled
   executables are cached at module level keyed on
   ``(bucket, slots, batch, sys, mode, bloom-shape)`` — repeated sweeps
-  never recompile (see :func:`cache_stats`). Trace buffers are donated
-  to the executable (they are rebuilt from host arrays each call).
-  Results are bit-identical to per-trace :func:`run`. For grids that
-  also vary ``SystemConfig`` / technique, drive this through
-  :class:`repro.core.campaign.Campaign`.
+  never recompile (see :func:`cache_stats`; the cache is LRU-bounded,
+  :func:`set_cache_capacity`). With more than one local device the
+  padded batch axis is ``shard_map``-sharded across them
+  (:func:`set_sharding`), and multi-group calls execute overlapped
+  through ``repro.core.executor`` (``serial=True`` forces the in-order
+  loop). Trace buffers are donated to the executable (they are rebuilt
+  from host arrays each call). Results are bit-identical to per-trace
+  :func:`run` in every combination. For grids that also vary
+  ``SystemConfig`` / technique, drive this through
+  :class:`repro.core.campaign.Campaign`. A fresh process can skip the
+  cold compiles entirely via
+  :func:`repro.utils.jax_compat.enable_persistent_compile_cache`.
 * :func:`run_ref` / :func:`run_ref_many` — the pre-optimization
   O(bucket)-per-slot engine, kept only to pin bit-exactness and to
   measure the steady-state speedup in ``benchmarks/run.py --section
@@ -91,7 +98,10 @@ initializes to select the legacy inline runtime.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import os
+import threading
 import warnings
 from typing import List, Optional, Sequence, Union
 
@@ -99,13 +109,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dram, smcprog
+from repro.core import dram, executor, smcprog
 from repro.core.bloom import bloom_probe_jnp
 from repro.core.dram import NOP, WRITE
 from repro.core.timescale import SystemConfig
 
 BIG = jnp.int32(2 ** 30)
 FP = 4096  # fixed-point denominator for tick<->cycle conversion
+
+# donation is best-effort by design (see _batched_fn); the per-call
+# catch_warnings there is not thread-safe (process-global filter state),
+# so overlapped group execution needs the filter installed up front too
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 def _mul_div(a, num, den):
     """Exact a * num // den without int32 overflow (num, den ~ 1e3..1e4)."""
@@ -577,10 +593,56 @@ def _batch_bucket(b: int) -> int:
 
 # ---------------------------------------------------------------------------
 # Batched campaigns: module-level compile cache over vmapped executables.
+# LRU-bounded (``REPRO_EMU_CACHE_CAP`` / :func:`set_cache_capacity`) so an
+# unbounded sweep of distinct compile keys cannot retain every executable
+# it ever built; evictions are counted in :func:`cache_stats`. A second
+# *process* re-running the same sweep skips the XLA compile entirely when
+# the persistent on-disk cache is enabled
+# (:func:`repro.utils.jax_compat.enable_persistent_compile_cache`).
 # ---------------------------------------------------------------------------
 
-_COMPILE_CACHE: dict = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_COMPILE_CACHE: "collections.OrderedDict[tuple, object]" = \
+    collections.OrderedDict()
+_CACHE_LOCK = threading.Lock()
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_CACHE_CAP = max(1, executor._env_int("REPRO_EMU_CACHE_CAP", 128))
+
+# batch-axis device sharding of run_many executables:
+#   'auto'  — shard_map over local devices when >1 is present and the
+#             padded batch axis divides across them; plain vmap otherwise
+#   'off'   — never wrap in shard_map
+#   'force' — always wrap, even over a single-device mesh (exercises the
+#             shard_map code path on 1-device hosts; bit-identical)
+_SHARD_MODES = ("auto", "off", "force")
+_SHARD_MODE = os.environ.get("REPRO_EXEC_SHARD", "auto")
+
+
+def set_sharding(mode: str) -> str:
+    """Set the batch-axis sharding mode ('auto' | 'off' | 'force');
+    returns the previous mode. Sharded and unsharded executables live
+    under distinct cache keys, so toggling never returns a stale fn."""
+    global _SHARD_MODE
+    if mode not in _SHARD_MODES:
+        raise ValueError(
+            f"sharding mode must be one of {_SHARD_MODES}, got {mode!r}")
+    old, _SHARD_MODE = _SHARD_MODE, mode
+    return old
+
+
+def _shard_count(batch: int) -> int:
+    """Number of mesh devices for a padded batch axis of ``batch``:
+    0 = no shard_map wrapper; >= 1 = wrap over that many devices (1 only
+    under 'force'). The padded batch is a power of two, so the largest
+    power-of-two device count that divides it is used."""
+    if _SHARD_MODE == "off":
+        return 0
+    ndev = jax.local_device_count()
+    n = 1
+    while n * 2 <= ndev and batch % (n * 2) == 0:
+        n *= 2
+    if n == 1 and _SHARD_MODE != "force":
+        return 0
+    return n
 
 
 def _norm_mode(mode: str) -> str:
@@ -634,28 +696,139 @@ def compile_key(bucket: int, batch: int, sys: SystemConfig, mode: str,
 
 
 def cache_stats() -> dict:
-    """{'hits': n, 'misses': n} over :func:`run_many` compile-cache
-    lookups since the last :func:`cache_clear` (misses == compiles)."""
-    return dict(_CACHE_STATS)
+    """Executable-cache counters since the last :func:`cache_clear`:
+    ``hits`` / ``misses`` (misses == in-process compiles) over
+    :func:`run_many` lookups, ``evictions`` (LRU drops past
+    ``capacity``), plus current ``size`` / ``capacity``. ``persistent``
+    mirrors the on-disk XLA cache counters when
+    :func:`repro.utils.jax_compat.enable_persistent_compile_cache` is
+    active (all-zero otherwise)."""
+    from repro.utils import jax_compat
+    with _CACHE_LOCK:
+        out = dict(_CACHE_STATS)
+        out["size"] = len(_COMPILE_CACHE)
+        out["capacity"] = _CACHE_CAP
+    out["persistent"] = jax_compat.persistent_cache_stats()
+    return out
 
 
 def cache_clear() -> None:
-    _COMPILE_CACHE.clear()
-    _CACHE_STATS["hits"] = 0
-    _CACHE_STATS["misses"] = 0
+    """Drop every cached executable and zero ALL counters (hits,
+    misses, and the eviction counter added with the LRU bound)."""
+    with _CACHE_LOCK:
+        _COMPILE_CACHE.clear()
+        for k in _CACHE_STATS:
+            _CACHE_STATS[k] = 0
+
+
+def set_cache_capacity(n: int) -> int:
+    """Bound the in-memory executable cache to ``n`` entries (LRU);
+    returns the previous capacity. Shrinking evicts immediately."""
+    global _CACHE_CAP
+    if n < 1:
+        raise ValueError(f"cache capacity must be >= 1, got {n}")
+    with _CACHE_LOCK:
+        old, _CACHE_CAP = _CACHE_CAP, n
+        while len(_COMPILE_CACHE) > _CACHE_CAP:
+            _COMPILE_CACHE.popitem(last=False)
+            _CACHE_STATS["evictions"] += 1
+    return old
+
+
+def _shard_wrap(fn, nshards: int, bshape):
+    """Wrap a batched runner in ``shard_map`` over ``nshards`` local
+    devices on the (leading) batch axis. Trace arrays shard; a shared
+    Bloom filter replicates; stacked per-trace filters shard. Inside
+    each shard the wrapped fn sees a ``batch/nshards`` slice and vmaps
+    over it exactly as in the unsharded path, so results concatenate to
+    the bit-identical full batch."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.utils import jax_compat
+    mesh = Mesh(np.array(jax.local_devices()[:nshards]), ("batch",))
+    spec = P("batch")
+    if bshape is None:
+        in_specs = (spec,) * 5
+    else:
+        in_specs = (spec,) * 5 + (spec if bshape[0] == "stacked" else P(),)
+    return jax_compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                out_specs=spec,
+                                **jax_compat.shard_map_kwargs())
+
+
+class _CachedRunner:
+    """One cached executable: a lazily-compiled jitted runner plus the
+    argument shapes its compile key fixes.
+
+    :meth:`prime` compiles it NOW, on the calling thread, by running an
+    all-zeros dummy batch (all-NOP-free zero reads; one scan execution,
+    noise next to the compile). ``prepare_tasks`` primes every resolved
+    runner in group order on the caller's thread before any executor
+    worker starts, which buys two properties the lazy first-call would
+    lose: (a) tracing/lowering interleaved across worker threads makes
+    jax's uid counters — and so the emitted StableHLO bytes and the
+    persistent on-disk cache key — nondeterministic across processes
+    (observed: one fresh disk entry per run); (b) only the *warmed* C++
+    jit fast path executes synchronously on the calling thread under
+    the inline CPU runtime — an unwarmed call (and the AOT
+    ``Lowered.compile()(...)`` path) enqueues onto the device's single
+    execute thread, which silently serializes the overlapped groups."""
+
+    __slots__ = ("jitted", "avals", "primed")
+
+    def __init__(self, jitted, avals):
+        self.jitted = jitted
+        self.avals = avals
+        self.primed = False
+
+    def prime(self) -> "_CachedRunner":
+        # donation warning noise is suppressed by the module-level
+        # filter (a per-call catch_warnings here would race: it mutates
+        # process-global filter state while workers may be executing)
+        if not self.primed:
+            self.jitted(*(jnp.zeros(s, d) for s, d in self.avals))
+            self.primed = True
+        return self
+
+    def __call__(self, *args):
+        return self.jitted(*args)
 
 
 def _batched_fn(key: tuple, ref: bool = False):
-    """Jitted vmapped runner for one compile key; built once per key.
-    ``ref=True`` builds the pre-optimization reference engine (no slot
-    budget, no donation) on a separate cache entry."""
-    ckey = ("ref", key) if ref else key
-    fn = _COMPILE_CACHE.get(ckey)
-    if fn is not None:
-        _CACHE_STATS["hits"] += 1
-        return fn
-    _CACHE_STATS["misses"] += 1
-    _, slots, _, sys, mode, bshape = key
+    """Jitted vmapped runner for one compile key; built once per key,
+    LRU-retained up to the cache capacity (a :class:`_CachedRunner`,
+    compiled on first :meth:`~_CachedRunner.prime` or call). ``ref=True``
+    builds the pre-optimization reference engine (no slot budget, no
+    donation) on a separate cache entry. When batch-axis sharding
+    applies (see :func:`set_sharding`), the runner is shard_mapped over
+    the local devices — sharded and unsharded variants fork the cache
+    key, so counter semantics are unchanged for a fixed device
+    topology."""
+    batch = key[2]
+    nshards = _shard_count(batch)
+    ckey = ("ref" if ref else "fast", nshards, key)
+    # get-or-create is atomic: the lock is held across the whole build
+    # (cheap — jit wrapping and Mesh construction; the XLA compile is
+    # deferred to prime()/first call), so two threads racing on one key
+    # can neither duplicate the entry nor skew the hit/miss counters
+    with _CACHE_LOCK:
+        fn = _COMPILE_CACHE.get(ckey)
+        if fn is not None:
+            _CACHE_STATS["hits"] += 1
+            _COMPILE_CACHE.move_to_end(ckey)
+            return fn
+        _CACHE_STATS["misses"] += 1
+        runner = _build_runner(key, ref, nshards)
+        _COMPILE_CACHE[ckey] = runner
+        while len(_COMPILE_CACHE) > _CACHE_CAP:
+            _COMPILE_CACHE.popitem(last=False)
+            _CACHE_STATS["evictions"] += 1
+    return runner
+
+
+def _build_runner(key: tuple, ref: bool, nshards: int) -> "_CachedRunner":
+    """Construct the (lazily-compiled) runner for one cache key."""
+    _, slots, batch, sys, mode, bshape = key
     core = _run_core_ref if ref else _run_core
     extra = {} if ref else {"slots": slots}
 
@@ -675,22 +848,20 @@ def _batched_fn(key: tuple, ref: bool = False):
                 in_axes=(0, 0, 0, 0, 0, words_axis))(
                 kind, bank, row, delta, dep, words)
 
+    if nshards:
+        fn = _shard_wrap(fn, nshards, bshape)
+
     # trace arrays are freshly staged from host memory every call, so the
     # executable may reuse their buffers for its outputs (bloom words can
     # be caller-shared jnp arrays -> not donated); donation is best-effort
     # by design, so the inputs-not-aliased warning is pure noise
-    if ref:
-        fn = jax.jit(fn)
-    else:
-        jitted = jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4))
-
-        def fn(*a, _jitted=jitted):
-            with warnings.catch_warnings():
-                warnings.filterwarnings(
-                    "ignore", message="Some donated buffers were not usable")
-                return _jitted(*a)
-    _COMPILE_CACHE[ckey] = fn
-    return fn
+    jitted = jax.jit(fn) if ref else jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4))
+    bucket, bb = key[0], _batch_bucket(batch)
+    avals = [((bb, bucket), jnp.int32)] * 5
+    if bshape is not None:
+        wshape = (bshape[1],) if bshape[0] == "shared" else (bb, bshape[1])
+        avals = avals + [(wshape, jnp.uint32)]
+    return _CachedRunner(jitted, avals)
 
 
 def _finalize(out_row: dict, padded: Trace, sys: SystemConfig,
@@ -729,57 +900,111 @@ def _normalize_blooms(blooms, n: int):
     return blooms
 
 
-def _run_grouped(traces: Sequence[Trace], sys: SystemConfig,
-                 mode: Union[str, Sequence[str]], blooms,
-                 ref: bool) -> List[dict]:
-    """Shared grouped-execution path for :func:`run_many` (exact slot
-    budgets) and :func:`run_ref_many` (uniform reference budgets)."""
+def check_mode(mode: str) -> str:
+    """Validate one evaluation mode; a real ValueError (not an assert
+    — asserts vanish under ``python -O``) carrying the offending value.
+    Single source of truth for every mode guard (``run`` / ``run_many``
+    / ``Campaign.add`` / ``Campaign.add_policy_grid``)."""
+    if mode not in ("ts", "nots", "reference"):
+        raise ValueError(
+            f"mode must be one of ('ts', 'nots', 'reference'), got {mode!r}")
+    return mode
+
+
+def _check_modes(modes: Sequence[str], n: int) -> List[str]:
+    modes = list(modes)
+    if len(modes) != n:
+        raise ValueError(
+            f"per-trace modes ({len(modes)}) must match len(traces) ({n})")
+    for m in modes:
+        check_mode(m)
+    return modes
+
+
+def prepare_tasks(traces: Sequence[Trace], sys: SystemConfig,
+                  mode: Union[str, Sequence[str]], blooms,
+                  results: List[Optional[dict]], ref: bool = False,
+                  ) -> List[executor.GroupTask]:
+    """Plan one :func:`run_many`-style call into executable
+    :class:`repro.core.executor.GroupTask`s WITHOUT running them.
+
+    Grouping, executable-cache resolution (``_batched_fn`` — so
+    ``cache_stats`` counters settle deterministically on the caller's
+    thread, in group order), and slot budgeting happen here; the
+    host-side padding/stacking and the device dispatch are deferred
+    into each task's ``pack``/``run``, which is what lets the
+    campaign executor overlap group k+1's packing with group k's
+    compute. Each task finalizes into its own ``results`` slots
+    (``results`` must be a list of ``len(traces)`` Nones).
+    """
     traces = list(traces)
     n = len(traces)
-    modes = [mode] * n if isinstance(mode, str) else list(mode)
-    assert len(modes) == n, "per-trace modes must match len(traces)"
-    assert all(m in ("ts", "nots", "reference") for m in modes)
+    modes = _check_modes([mode] * n if isinstance(mode, str) else mode, n)
     blooms = _normalize_blooms(blooms, n)
 
     groups: dict = {}  # (bucket, normalized mode) -> [trace index]
     for i, tr in enumerate(traces):
         groups.setdefault((_bucket(tr.n), _norm_mode(modes[i])), []).append(i)
 
-    results: List[Optional[dict]] = [None] * n
+    tasks: List[executor.GroupTask] = []
     for (bucket, gmode), idxs in groups.items():
-        padded = [pad_trace(traces[i], bucket) for i in idxs]
-        bb = _batch_bucket(len(idxs))
-        if bb > len(idxs):  # all-NOP filler rows, discarded below
-            filler = Trace.of(np.full(bucket, 4), np.zeros(bucket),
-                              np.zeros(bucket), np.zeros(bucket))
-            padded += [filler] * (bb - len(idxs))
-        stacked = [jnp.asarray(np.stack([getattr(p, f) for p in padded]))
-                   for f in ("kind", "bank", "row", "delta", "dep")]
-
         slots = None if ref else slot_budget(
             bucket, max(traces[i].n_real for i in idxs))
         key = compile_key(bucket, len(idxs), sys, gmode, blooms, slots)
-        fn = _batched_fn(key, ref=ref)
-        if blooms is None:
-            out = fn(*stacked)
-        elif isinstance(blooms, tuple):
-            out = fn(*stacked, jnp.asarray(blooms[0]))
-        else:
-            words = np.stack([np.asarray(blooms[i][0]) for i in idxs])
-            if bb > len(idxs):
-                words = np.concatenate(
-                    [words, np.repeat(words[:1], bb - len(idxs), axis=0)])
-            out = fn(*stacked, jnp.asarray(words))
-        out = {kk: np.asarray(v) for kk, v in out.items()}
-        for j, i in enumerate(idxs):
-            row = {kk: v[j] for kk, v in out.items()}
-            results[i] = _finalize(row, padded[j], sys, modes[i])
+        fn = _batched_fn(key, ref=ref).prime()
+
+        def pack(idxs=idxs, bucket=bucket):
+            padded = [pad_trace(traces[i], bucket) for i in idxs]
+            bb = _batch_bucket(len(idxs))
+            if bb > len(idxs):  # all-NOP filler rows, discarded below
+                filler = Trace.of(np.full(bucket, 4), np.zeros(bucket),
+                                  np.zeros(bucket), np.zeros(bucket))
+                padded += [filler] * (bb - len(idxs))
+            stacked = [jnp.asarray(np.stack([getattr(p, f) for p in padded]))
+                       for f in ("kind", "bank", "row", "delta", "dep")]
+            if blooms is None:
+                args = tuple(stacked)
+            elif isinstance(blooms, tuple):
+                args = (*stacked, jnp.asarray(blooms[0]))
+            else:
+                words = np.stack([np.asarray(blooms[i][0]) for i in idxs])
+                if bb > len(idxs):
+                    words = np.concatenate(
+                        [words, np.repeat(words[:1], bb - len(idxs), axis=0)])
+                args = (*stacked, jnp.asarray(words))
+            return args, padded
+
+        def finalize(out, padded, idxs=idxs):
+            for j, i in enumerate(idxs):
+                row = {kk: v[j] for kk, v in out.items()}
+                results[i] = _finalize(row, padded[j], sys, modes[i])
+
+        tasks.append(executor.GroupTask(
+            fn=fn, pack=pack, finalize=finalize,
+            label=f"b{bucket}x{len(idxs)}:{gmode}",
+            cost=(slots or 2 * bucket + 4) * _batch_bucket(len(idxs))))
+    return tasks
+
+
+def _run_grouped(traces: Sequence[Trace], sys: SystemConfig,
+                 mode: Union[str, Sequence[str]], blooms,
+                 ref: bool, serial: Optional[bool] = None) -> List[dict]:
+    """Shared grouped-execution path for :func:`run_many` (exact slot
+    budgets) and :func:`run_ref_many` (uniform reference budgets):
+    plan into group tasks, then execute — overlapped across the
+    executor's worker pool when more than one group is present, or
+    strictly in-order under ``serial=True``. Bit-identical either way
+    (the executor only changes wall-clock interleaving)."""
+    traces = list(traces)
+    results: List[Optional[dict]] = [None] * len(traces)
+    tasks = prepare_tasks(traces, sys, mode, blooms, results, ref=ref)
+    executor.execute(tasks, serial=serial)
     return results
 
 
 def run_many(traces: Sequence[Trace], sys: SystemConfig,
              mode: Union[str, Sequence[str]] = "ts",
-             blooms=None) -> List[dict]:
+             blooms=None, serial: Optional[bool] = None) -> List[dict]:
     """Evaluate many traces under one ``SystemConfig`` in batched calls.
 
     ``mode`` is one of 'ts' | 'nots' | 'reference', or a per-trace
@@ -791,19 +1016,23 @@ def run_many(traces: Sequence[Trace], sys: SystemConfig,
     its bucket, pads the batch axis to a power of two with all-NOP
     traces, computes its exact :func:`slot_budget` from the largest
     member, and executes as ONE vmapped, jit-cached call (trace buffers
-    donated). Returns one dict per input trace, in input order,
-    bit-identical to ``run(trace, sys, mode, bloom)``.
+    donated; batch axis sharded across local devices when present —
+    see :func:`set_sharding`). Multi-group calls overlap host packing
+    with device compute across the ``repro.core.executor`` worker pool;
+    ``serial=True`` forces the in-order loop (bit-identical, for A/B).
+    Returns one dict per input trace, in input order, bit-identical to
+    ``run(trace, sys, mode, bloom)``.
     """
-    return _run_grouped(traces, sys, mode, blooms, ref=False)
+    return _run_grouped(traces, sys, mode, blooms, ref=False, serial=serial)
 
 
 def run_ref_many(traces: Sequence[Trace], sys: SystemConfig,
                  mode: Union[str, Sequence[str]] = "ts",
-                 blooms=None) -> List[dict]:
+                 blooms=None, serial: Optional[bool] = None) -> List[dict]:
     """The pre-optimization engine over the same grouped/batched path:
     O(bucket) work per slot, uniform ``2*bucket+4`` budget. Kept for
     bit-exactness property tests and the sim_speed steady-state A/B."""
-    return _run_grouped(traces, sys, mode, blooms, ref=True)
+    return _run_grouped(traces, sys, mode, blooms, ref=True, serial=serial)
 
 
 def run(trace: Trace, sys: SystemConfig, mode: str = "ts",
@@ -818,12 +1047,10 @@ def run(trace: Trace, sys: SystemConfig, mode: str = "ts",
     A thin wrapper over a :func:`run_many` batch of one — single-trace
     and campaign paths share one compiled-program cache.
     """
-    assert mode in ("ts", "nots", "reference")
     return run_many([trace], sys, mode=mode, blooms=bloom)[0]
 
 
 def run_ref(trace: Trace, sys: SystemConfig, mode: str = "ts",
             bloom: Optional[tuple] = None) -> dict:
     """Single-trace wrapper over :func:`run_ref_many` (see there)."""
-    assert mode in ("ts", "nots", "reference")
     return run_ref_many([trace], sys, mode=mode, blooms=bloom)[0]

@@ -1,0 +1,153 @@
+"""Overlapped campaign executor: run prepared compile-key groups with
+host/device overlap instead of the serial pack -> dispatch -> block loop.
+
+Why a thread pool and not async dispatch: on XLA:CPU under the inline
+runtime (``jax_compat.enable_fast_cpu_scan``) an executable runs
+synchronously on the calling thread, so ``fn(*args)`` only returns after
+the scan finishes — there is nothing to overlap from one Python thread.
+XLA does release the GIL for the whole execution, though, so two
+*threads* genuinely overlap: while a worker is inside XLA running group
+k, another worker packs (``np.stack`` / padding, pure Python+NumPy) and
+then executes group k+1 on the second core. Measured on the emulator
+scan this is ~1.6-1.9x over the serial loop on a 2-core host, scaling
+with cores until group compute is exhausted.
+
+Determinism contract:
+
+* A :class:`GroupTask` is *prepared* on the caller's thread — in
+  particular :func:`repro.core.emulator._batched_fn` (the in-memory
+  executable LRU) is resolved before any worker starts, so
+  ``cache_stats()`` counters are exactly what the serial loop would
+  produce, in the same order.
+* Each task's ``finalize`` writes only its own result slots (disjoint
+  indices of a shared list), so concurrent finalization needs no lock.
+* Execution is bit-identical to the serial loop by construction: the
+  same executable runs on the same packed arrays; only wall-clock
+  interleaving changes. ``execute(tasks, serial=True)`` keeps the PR 4
+  in-order loop for A/B (``benchmarks --section executor_speed``).
+
+The pool is module-level and lazily built (``REPRO_EXEC_WORKERS`` caps
+it, default ``min(cpu_count, 8)``); :func:`set_workers` resizes it.
+Worker threads only ever touch jax through executable calls and
+``jnp.asarray`` staging, both thread-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["GroupTask", "execute", "set_workers", "workers"]
+
+
+@dataclasses.dataclass
+class GroupTask:
+    """One compile-key group, prepared but not yet executed.
+
+    ``fn`` is the resolved (jitted, possibly shard_mapped) batched
+    executable; ``pack`` builds its argument arrays on the host and
+    returns ``(args, ctx)``; ``finalize`` receives the gathered NumPy
+    outputs plus ``ctx`` and writes per-trace records into the
+    caller's result slots. ``pack`` and ``finalize`` run on a worker
+    thread under :func:`execute`'s overlapped mode — keep them free of
+    shared mutable state beyond the disjoint result slots.
+    """
+    fn: Callable[..., Any]
+    pack: Callable[[], Tuple[tuple, Any]]
+    finalize: Callable[[dict, Any], None]
+    label: str = ""
+    cost: int = 0   # relative work hint (e.g. slots * batch) for LPT order
+
+    def run(self) -> None:
+        args, ctx = self.pack()                      # host: pad + stack
+        out = self.fn(*args)                         # device: the scan
+        out = {k: np.asarray(v) for k, v in out.items()}  # gather (blocks)
+        self.finalize(out, ctx)
+
+
+def _env_int(name: str, default: int) -> int:
+    """Parse an integer env knob; a bad value must not kill library
+    import — warn with the offending value and fall back."""
+    env = os.environ.get(name)
+    if not env:
+        return default
+    try:
+        return int(env)
+    except ValueError:
+        import warnings
+        warnings.warn(f"ignoring non-integer {name}={env!r}; "
+                      f"using default {default}", stacklevel=2)
+        return default
+
+
+def _workers_default() -> int:
+    return max(1, _env_int("REPRO_EXEC_WORKERS",
+                           min(os.cpu_count() or 1, 8)))
+
+
+_LOCK = threading.Lock()
+_POOL: Optional[ThreadPoolExecutor] = None
+_WORKERS = _workers_default()
+
+
+def workers() -> int:
+    """Current overlapped-execution worker count."""
+    return _WORKERS
+
+
+def set_workers(n: int) -> int:
+    """Resize the worker pool; returns the previous count. ``n <= 1``
+    makes :func:`execute` fall back to the serial in-order loop."""
+    global _POOL, _WORKERS
+    if n < 1:
+        raise ValueError(f"worker count must be >= 1, got {n}")
+    with _LOCK:
+        old = _WORKERS
+        if n != _WORKERS:
+            if _POOL is not None:
+                _POOL.shutdown(wait=True)
+                _POOL = None
+            _WORKERS = n
+    return old
+
+
+def _pool() -> ThreadPoolExecutor:
+    global _POOL
+    with _LOCK:
+        if _POOL is None:
+            _POOL = ThreadPoolExecutor(
+                max_workers=_WORKERS, thread_name_prefix="repro-exec")
+        return _POOL
+
+
+def execute(tasks: Sequence[GroupTask], serial: Optional[bool] = None) -> None:
+    """Run every task; overlapped across the worker pool unless
+    ``serial`` (or a single task / single worker) forces the in-order
+    loop. Tasks were prepared in submission order on the caller's
+    thread, so compile-cache counters are already settled; execution
+    order does not affect results (disjoint result slots). The first
+    worker exception propagates after all tasks settle."""
+    tasks = list(tasks)
+    if serial is None:
+        serial = len(tasks) <= 1 or _WORKERS <= 1
+    if serial:
+        for t in tasks:
+            t.run()
+        return
+    # longest-processing-time-first: dispatching expensive groups first
+    # minimizes the tail where one worker finishes a big group alone
+    # (order is free to change — results land in disjoint slots)
+    tasks.sort(key=lambda t: t.cost, reverse=True)
+    futures = [_pool().submit(t.run) for t in tasks]
+    err: List[BaseException] = []
+    for f in futures:
+        try:
+            f.result()
+        except BaseException as e:  # settle all before raising
+            err.append(e)
+    if err:
+        raise err[0]

@@ -123,11 +123,14 @@ class SchedulingPolicyStudy:
         self.sys = sys
         self.programs = list(programs) if programs is not None \
             else list(smcprog.builtin_programs().values())
-        assert self.programs, "need at least one policy program"
+        if not self.programs:
+            raise ValueError("need at least one policy program")
         names = [p.name for p in self.programs]
-        assert len(set(names)) == len(names), \
-            f"program names must be unique (results key on them), " \
-            f"got {sorted(names)}"
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(
+                f"program names must be unique (results key on them), "
+                f"got duplicates {dupes}")
         self.baseline = baseline
 
     def evaluate_traces(self, trs: Sequence, mode: str = "ts",

@@ -22,6 +22,12 @@ Every call site goes through these helpers instead of probing
   the emulator's long scalar-carry scans fast (see docstring). Call it
   at process entry, before the first jax computation; calling it after
   the backend initialized raises (the flag would be silently ignored).
+* :func:`enable_persistent_compile_cache` — wire up JAX's on-disk XLA
+  compilation cache (default ``artifacts/xla_cache/``) so a fresh
+  process re-running an already-seen sweep skips the cold compiles;
+  :func:`persistent_cache_stats` counts its hits/misses via the JAX
+  monitoring events (version-tolerant: counters stay zero if the event
+  API moved).
 """
 from __future__ import annotations
 
@@ -64,6 +70,13 @@ def enable_fast_cpu_scan() -> bool:
     inline runtime has neither problem. Matmul-heavy model code is
     unaffected either way (both dispatch to Eigen).
 
+    Also disables XLA:CPU *async dispatch* (where supported): async
+    dispatch enqueues every execution onto one per-device execute
+    thread, which silently serializes the overlapped campaign executor
+    (``repro.core.executor``) — with it off, a warm executable runs
+    synchronously on the calling worker thread, so independent compile
+    groups genuinely execute in parallel across cores.
+
     Must run before the CPU backend is created: returns True when the
     flag is (now) in effect for future compilations, and raises
     ``RuntimeError`` when the backend already initialized without it —
@@ -76,6 +89,10 @@ def enable_fast_cpu_scan() -> bool:
     metrics, so flops-accounting tools (``repro.launch.dryrun``)
     should not run under it.
     """
+    try:  # sync dispatch: see docstring (anytime config, not an XLA flag)
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+    except (AttributeError, KeyError):  # pragma: no cover - option absent
+        pass
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_cpu_use_thunk_runtime" in flags:
         if "xla_cpu_use_thunk_runtime=false" in flags:
@@ -101,6 +118,62 @@ def enable_fast_cpu_scan() -> bool:
     os.environ["XLA_FLAGS"] = \
         (flags + " --xla_cpu_use_thunk_runtime=false").strip()
     return True
+
+
+_PCACHE_STATS = {"hits": 0, "misses": 0}
+_PCACHE_DIR: str | None = None
+
+
+def _pcache_event(event: str, **kwargs) -> None:
+    if event == "/jax/compilation_cache/cache_hits":
+        _PCACHE_STATS["hits"] += 1
+    elif event == "/jax/compilation_cache/cache_misses":
+        _PCACHE_STATS["misses"] += 1
+
+
+def enable_persistent_compile_cache(
+        cache_dir: str = os.path.join("artifacts", "xla_cache")) -> str:
+    """Persist XLA executables to ``cache_dir`` across processes.
+
+    A second process running the same sweep (same shapes, configs, XLA
+    flags) then loads each executable from disk instead of re-paying
+    the cold compile — on the emulator scan that is seconds per
+    compile-key group. Every entry-size / compile-time threshold is
+    zeroed so the emulator's scan executables always qualify.
+
+    Call it at process entry, next to :func:`enable_fast_cpu_scan`:
+    JAX latches its cache-enabled decision at the first compilation, so
+    the defensive ``reset_cache()`` below only reliably re-opens the
+    decision on JAX versions that expose it. Safe to call repeatedly
+    (e.g. to move the directory). Returns the absolute cache dir.
+    """
+    global _PCACHE_DIR
+    cache_dir = os.path.abspath(cache_dir)
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    if _PCACHE_DIR is None:  # register the hit/miss listener once
+        try:
+            from jax._src import monitoring
+            monitoring.register_event_listener(_pcache_event)
+        except (ImportError, AttributeError):  # pragma: no cover
+            pass  # counters stay zero; caching itself still works
+    try:  # re-open JAX's latched is-cache-used decision if already taken
+        from jax._src import compilation_cache
+        compilation_cache.reset_cache()
+    except (ImportError, AttributeError):  # pragma: no cover
+        pass
+    _PCACHE_DIR = cache_dir
+    return cache_dir
+
+
+def persistent_cache_stats() -> Dict[str, Any]:
+    """{'hits': n, 'misses': n, 'dir': path-or-None} for the on-disk
+    XLA compilation cache (all-zero/None until
+    :func:`enable_persistent_compile_cache` ran). A hit means an XLA
+    compile was skipped by loading the executable from disk."""
+    return {**_PCACHE_STATS, "dir": _PCACHE_DIR}
 
 
 def cost_analysis_dict(compiled) -> Dict[str, float]:

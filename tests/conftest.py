@@ -5,6 +5,15 @@ import pytest
 warnings.filterwarnings("ignore", category=RuntimeWarning)
 
 
+def pytest_configure(config):
+    # donation is best-effort by design in the emulator (see
+    # emulator._build_runner); pytest's warning capture overrides the
+    # module-level filter installed there, so re-add it here
+    config.addinivalue_line(
+        "filterwarnings",
+        "ignore:Some donated buffers were not usable")
+
+
 def tiny_cfg(name, **over):
     from repro.configs import get_config
     cfg = get_config(name)

@@ -297,7 +297,8 @@ class TestApiEdges:
     def test_meta_cannot_shadow_result_fields(self):
         c = Campaign()
         c.add(mixed_traces(1)[0], JETSON_NANO, exec_cycles=0)
-        with pytest.raises(AssertionError, match="shadow"):
+        # ValueError, not AssertionError: the guard survives python -O
+        with pytest.raises(ValueError, match="shadow"):
             c.run()
 
     def test_list_typed_shared_bloom_broadcasts(self):

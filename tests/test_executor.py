@@ -1,0 +1,294 @@
+"""The overlapped campaign executor (PR 5): bit-identity of overlapped /
+sharded execution vs the serial PR 4 group loop, add-order preservation,
+the LRU bound on the in-memory executable cache, the persistent on-disk
+compile cache across processes, and the ValueError API guards."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import emulator, executor, smcprog
+from repro.core.bloom import BloomFilter
+from repro.core.campaign import Campaign
+from repro.core.emulator import Trace, run_many
+from repro.core.timescale import JETSON_NANO
+
+
+def mk_trace(rng, n):
+    return Trace.of(kind=rng.randint(0, 2, n), bank=rng.randint(0, 16, n),
+                    row=rng.randint(0, 4096, n), delta=rng.randint(1, 8, n),
+                    dep=rng.randint(0, 2, n))
+
+
+def small_bloom(seed=0):
+    rng = np.random.RandomState(seed)
+    bf = BloomFilter.build(rng.randint(0, 1 << 19, 150).astype(np.uint32),
+                           m_bits=1 << 14, k=3)
+    return (bf.bits, bf.k, bf.m_bits)
+
+
+def mixed_grid_campaign(seed=3):
+    """A heterogeneous grid spanning modes x policies x bloom arms x two
+    length buckets — the shape the overlapped executor must keep
+    bit-identical to the serial loop."""
+    rng = np.random.RandomState(seed)
+    trs = [mk_trace(rng, n) for n in (40, 44, 90, 95)]
+    bloom = small_bloom(seed)
+    prog = smcprog.frfcfs_program()
+    c = Campaign()
+    for i, tr in enumerate(trs):
+        for mode in ("ts", "nots"):
+            c.add(tr, JETSON_NANO, mode=mode, i=i, arm="plain")
+        c.add(tr, JETSON_NANO, mode="ts", bloom=bloom, i=i, arm="bloom")
+        c.add_policy_grid(tr, JETSON_NANO, [prog], mode="ts",
+                          derive_cost=False, i=i, arm="policy")
+    return c
+
+
+class TestOverlapBitIdentity:
+    def test_campaign_overlapped_matches_serial(self):
+        c = mixed_grid_campaign()
+        assert c.n_groups() >= 6  # genuinely heterogeneous
+        a = c.run(serial=True)
+        b = c.run()
+        assert len(a) == len(b) == len(c)
+        for x, y in zip(a, b):
+            assert int(x["exec_cycles"]) == int(y["exec_cycles"])
+            assert int(x["row_hits"]) == int(y["row_hits"])
+            np.testing.assert_array_equal(x["t_resp"], y["t_resp"])
+            np.testing.assert_array_equal(x["t_issue"], y["t_issue"])
+            assert x["mode"] == y["mode"]
+
+    def test_run_many_overlapped_matches_serial(self):
+        rng = np.random.RandomState(11)
+        trs = [mk_trace(rng, n) for n in (35, 70, 140, 40, 80)]
+        modes = ["ts", "nots", "ts", "reference", "ts"]
+        a = run_many(trs, JETSON_NANO, modes, serial=True)
+        b = run_many(trs, JETSON_NANO, modes)
+        for x, y in zip(a, b):
+            assert int(x["exec_cycles"]) == int(y["exec_cycles"])
+            np.testing.assert_array_equal(x["t_resp"], y["t_resp"])
+
+    def test_add_order_preserved(self):
+        """Records come back in add order even though groups execute
+        concurrently and finish in arbitrary order."""
+        c = mixed_grid_campaign(seed=9)
+        for j, p in enumerate(c.points):
+            p.meta["seq"] = j
+        recs = c.run()
+        assert [r["seq"] for r in recs] == list(range(len(c)))
+        # and per-point identity against the single-trace path
+        k = len(c) // 2
+        p = c.points[k]
+        solo = emulator.run(p.trace, p.sys, p.mode, bloom=p.bloom)
+        assert int(solo["exec_cycles"]) == int(recs[k]["exec_cycles"])
+
+    def test_executor_propagates_worker_errors(self):
+        def boom():
+            raise RuntimeError("pack failed")
+        tasks = [executor.GroupTask(fn=lambda: None, pack=boom,
+                                    finalize=lambda o, c: None)
+                 for _ in range(3)]
+        with pytest.raises(RuntimeError, match="pack failed"):
+            executor.execute(tasks, serial=False)
+
+    def test_set_workers_validates_and_restores(self):
+        old = executor.set_workers(1)
+        try:
+            # workers=1 forces the serial fallback; results unchanged
+            rng = np.random.RandomState(2)
+            trs = [mk_trace(rng, 40), mk_trace(rng, 90)]
+            out = run_many(trs, JETSON_NANO, ["ts", "nots"])
+            assert all(r is not None for r in out)
+            with pytest.raises(ValueError, match="worker count"):
+                executor.set_workers(0)
+        finally:
+            executor.set_workers(old)
+
+
+class TestSharding:
+    def test_forced_single_device_shard_map_bit_identical(self):
+        """The shard_map code path itself (1-device mesh) must be
+        bit-identical to the plain vmap path — the single-device half
+        of the sharding contract."""
+        rng = np.random.RandomState(5)
+        trs = [mk_trace(rng, 40) for _ in range(4)]
+        bloom = small_bloom(5)
+        old = emulator.set_sharding("force")
+        try:
+            a = run_many(trs, JETSON_NANO, "ts")
+            ab = run_many(trs, JETSON_NANO, "ts", blooms=bloom)
+        finally:
+            emulator.set_sharding(old)
+        b = run_many(trs, JETSON_NANO, "ts")
+        bb = run_many(trs, JETSON_NANO, "ts", blooms=bloom)
+        for x, y in zip(a + ab, b + bb):
+            assert int(x["exec_cycles"]) == int(y["exec_cycles"])
+            np.testing.assert_array_equal(x["t_resp"], y["t_resp"])
+
+    def test_set_sharding_validates(self):
+        with pytest.raises(ValueError, match="sharding mode"):
+            emulator.set_sharding("sometimes")
+
+    def test_shard_count_divisibility(self):
+        """Sharding only engages when the padded batch divides across a
+        power-of-two device count; 'off' always disables."""
+        old = emulator.set_sharding("off")
+        try:
+            assert emulator._shard_count(8) == 0
+        finally:
+            emulator.set_sharding(old)
+
+    def test_multi_device_sharded_and_persistent_cache(self, tmp_path):
+        """Two forced host devices in a subprocess: the shard_map'd
+        batch axis must reproduce this (single-device, unsharded)
+        process bit-for-bit, and a second process over the same
+        persistent cache dir must skip the XLA compiles (hits > 0)."""
+        child = tmp_path / "child.py"
+        cache = tmp_path / "xla_cache"
+        child.write_text(
+            "import json, os, sys\n"
+            "os.environ['XLA_FLAGS'] = (os.environ.get('XLA_FLAGS', '')\n"
+            "    + ' --xla_force_host_platform_device_count=2')\n"
+            "import numpy as np\n"
+            "from repro.utils.jax_compat import (\n"
+            "    enable_persistent_compile_cache, persistent_cache_stats)\n"
+            "enable_persistent_compile_cache(sys.argv[1])\n"
+            "import jax\n"
+            "from repro.core import emulator\n"
+            "from repro.core.emulator import Trace, run_many\n"
+            "from repro.core.timescale import JETSON_NANO\n"
+            "assert jax.local_device_count() == 2\n"
+            "assert emulator._shard_count(4) == 2  # sharding engages\n"
+            "rng = np.random.RandomState(17)\n"
+            "def mk(n):\n"
+            "    return Trace.of(kind=rng.randint(0, 2, n),\n"
+            "                    bank=rng.randint(0, 16, n),\n"
+            "                    row=rng.randint(0, 4096, n),\n"
+            "                    delta=rng.randint(1, 8, n),\n"
+            "                    dep=rng.randint(0, 2, n))\n"
+            "trs = [mk(40), mk(42), mk(44), mk(46), mk(90), mk(95)]\n"
+            "out = run_many(trs, JETSON_NANO,\n"
+            "               ['ts'] * 4 + ['nots', 'nots'])\n"
+            "print(json.dumps({\n"
+            "  'exec': [int(r['exec_cycles']) for r in out],\n"
+            "  'resp': [int(np.asarray(r['t_resp']).astype(np.int64).sum())\n"
+            "           for r in out],\n"
+            "  'pcache': persistent_cache_stats()}))\n")
+        src = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "src"))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        outs = []
+        for _ in range(2):
+            p = subprocess.run(
+                [sys.executable, str(child), str(cache)], env=env,
+                capture_output=True, text=True, timeout=420)
+            assert p.returncode == 0, p.stderr[-2000:]
+            outs.append(json.loads(p.stdout.strip().splitlines()[-1]))
+        first, second = outs
+        # same sweep in this (single-device) process, no sharding
+        rng = np.random.RandomState(17)
+        trs = [mk_trace(rng, n) for n in (40, 42, 44, 46, 90, 95)]
+        here = run_many(trs, JETSON_NANO, ["ts"] * 4 + ["nots", "nots"])
+        assert first["exec"] == second["exec"] \
+            == [int(r["exec_cycles"]) for r in here]
+        assert first["resp"] == second["resp"] \
+            == [int(np.asarray(r["t_resp"]).astype(np.int64).sum())
+                for r in here]
+        # cold process: everything misses; warm process: disk hits
+        assert first["pcache"]["misses"] > 0
+        assert second["pcache"]["hits"] > 0
+        assert second["pcache"]["misses"] == 0
+
+
+class TestCacheLRU:
+    def test_lru_bounds_hundred_group_sweep(self):
+        """A 100-group sweep must not retain 100 executables: the LRU
+        cap bounds the cache and counts evictions; cache_clear resets
+        every counter, including the new ones."""
+        emulator.cache_clear()
+        old = emulator.set_cache_capacity(8)
+        try:
+            base = emulator.compile_key(32, 1, JETSON_NANO, "ts", None, 40)
+            for i in range(100):  # 100 distinct compile keys
+                key = (32, 40 + 2 * i) + base[2:]
+                emulator._batched_fn(key)
+            st = emulator.cache_stats()
+            assert st["size"] <= 8
+            assert st["misses"] == 100
+            assert st["evictions"] == 92
+            # most-recent key is retained...
+            emulator._batched_fn((32, 40 + 2 * 99) + base[2:])
+            assert emulator.cache_stats()["hits"] == 1
+            # ...the oldest was evicted
+            emulator._batched_fn((32, 40) + base[2:])
+            assert emulator.cache_stats()["misses"] == 101
+            emulator.cache_clear()
+            st = emulator.cache_stats()
+            assert (st["hits"], st["misses"], st["evictions"], st["size"]) \
+                == (0, 0, 0, 0)
+        finally:
+            emulator.set_cache_capacity(old)
+            emulator.cache_clear()
+
+    def test_lru_end_to_end_eviction_and_recompile(self):
+        """Through the real run path: with capacity 2, a third distinct
+        group evicts the first, and revisiting it recompiles (a miss,
+        not a stale hit) with results unchanged."""
+        rng = np.random.RandomState(31)
+        t32, t64, t128 = (mk_trace(rng, n) for n in (20, 40, 80))
+        emulator.cache_clear()
+        old = emulator.set_cache_capacity(2)
+        try:
+            first = int(emulator.run(t32, JETSON_NANO, "ts")["exec_cycles"])
+            emulator.run(t64, JETSON_NANO, "ts")
+            emulator.run(t128, JETSON_NANO, "ts")
+            st = emulator.cache_stats()
+            assert st["size"] == 2 and st["evictions"] == 1
+            again = emulator.run(t32, JETSON_NANO, "ts")
+            st2 = emulator.cache_stats()
+            assert st2["misses"] == st["misses"] + 1  # genuinely recompiled
+            assert int(again["exec_cycles"]) == first
+        finally:
+            emulator.set_cache_capacity(old)
+            emulator.cache_clear()
+
+    def test_capacity_validation_and_shrink(self):
+        with pytest.raises(ValueError, match="capacity"):
+            emulator.set_cache_capacity(0)
+        old = emulator.set_cache_capacity(4)
+        emulator.set_cache_capacity(old)
+        assert emulator.cache_stats()["capacity"] == old
+
+
+class TestValueErrorGuards:
+    """The mode guards must be real exceptions (asserts vanish under
+    ``python -O``) and carry the offending value."""
+
+    def test_campaign_add_bad_mode(self):
+        with pytest.raises(ValueError, match="'warp'"):
+            Campaign().add(mk_trace(np.random.RandomState(0), 8),
+                           JETSON_NANO, mode="warp")
+
+    def test_add_policy_grid_bad_mode(self):
+        with pytest.raises(ValueError, match="'fast'"):
+            Campaign().add_policy_grid(
+                mk_trace(np.random.RandomState(0), 8), JETSON_NANO,
+                [smcprog.frfcfs_program()], mode="fast")
+
+    def test_run_many_bad_mode(self):
+        tr = mk_trace(np.random.RandomState(0), 8)
+        with pytest.raises(ValueError, match="'emu'"):
+            run_many([tr], JETSON_NANO, "emu")
+        with pytest.raises(ValueError, match="match len"):
+            run_many([tr, tr], JETSON_NANO, ["ts"])
+
+    def test_run_bad_mode(self):
+        with pytest.raises(ValueError, match="'x'"):
+            emulator.run(mk_trace(np.random.RandomState(0), 8),
+                         JETSON_NANO, "x")

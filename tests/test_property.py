@@ -143,6 +143,49 @@ def test_policy_program_bit_identical_to_legacy(seed, n, window, sched, mode):
     np.testing.assert_array_equal(a["t_resp"], d["t_resp"])
 
 
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.booleans())
+def test_overlapped_executor_bit_identical_to_serial(seed, force_shard):
+    """PR 5 contract: `Campaign.run()` (groups overlapped across the
+    executor's worker pool, batch axis shard_mapped when forced/multi-
+    device) must be bit-identical to `run(serial=True)` (the PR 4
+    in-order group loop) across a randomized mixed grid of modes x
+    policies x bloom arms x length buckets, with records in add order."""
+    import dataclasses
+    from repro.core import emulator, smcprog
+    from repro.core.campaign import Campaign
+    rng = np.random.RandomState(seed % (2 ** 31))
+    bf = BloomFilter.build(rng.randint(0, 1 << 19, 100).astype(np.uint32),
+                           m_bits=1 << 14, k=3)
+    bloom = (bf.bits, bf.k, bf.m_bits)
+    prog = smcprog.frfcfs_program()
+    c = Campaign()
+    for i in range(int(rng.randint(2, 5))):
+        n = int(rng.randint(8, 90))
+        tr = Trace.of(kind=rng.randint(0, 5, n), bank=rng.randint(0, 16, n),
+                      row=rng.randint(0, 4096, n),
+                      delta=rng.randint(0, 24, n), dep=rng.randint(0, 3, n))
+        mode = ("ts", "nots", "reference")[int(rng.randint(3))]
+        c.add(tr, JETSON_NANO, mode=mode, i=i, arm="plain")
+        if rng.rand() < 0.5:
+            c.add(tr, JETSON_NANO, mode="ts", bloom=bloom, i=i, arm="bloom")
+        if rng.rand() < 0.5:
+            c.add(tr, dataclasses.replace(JETSON_NANO, policy=prog),
+                  mode=mode, i=i, arm="policy")
+    old = emulator.set_sharding("force" if force_shard else "auto")
+    try:
+        b = c.run()
+    finally:
+        emulator.set_sharding(old)
+    a = c.run(serial=True)
+    assert [(r["i"], r["arm"]) for r in a] == [(r["i"], r["arm"]) for r in b]
+    for x, y in zip(a, b):
+        assert int(x["exec_cycles"]) == int(y["exec_cycles"])
+        assert int(x["row_hits"]) == int(y["row_hits"])
+        np.testing.assert_array_equal(x["t_resp"], y["t_resp"])
+        np.testing.assert_array_equal(x["t_issue"], y["t_issue"])
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 1000))
 def test_emulator_deterministic(seed):

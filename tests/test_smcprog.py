@@ -181,9 +181,10 @@ class TestPolicyGrid:
         b1, b2 = PolicyBuilder(), PolicyBuilder()
         progs = [b1.build(score=b1.score_age()),
                  b2.build(score=b2.score_row_hit())]
-        with pytest.raises(AssertionError, match="unique"):
+        # ValueError, not AssertionError: the guard must survive python -O
+        with pytest.raises(ValueError, match="unique"):
             Campaign().add_policy_grid(bursty_trace(), JETSON_NANO, progs)
-        with pytest.raises(AssertionError, match="unique"):
+        with pytest.raises(ValueError, match="unique"):
             SchedulingPolicyStudy(JETSON_NANO, programs=progs)
 
     def test_policy_study(self):
