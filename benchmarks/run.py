@@ -20,6 +20,17 @@ the serial group loop >= 1.5x warm (``executor_speed_overlap_speedup_x``,
 multicore hosts), and a second process over the persistent XLA cache
 must skip every recompile (``executor_speed_pcache_second_hits`` > 0,
 ``..._misses`` == 0).
+PR 7 gates (``--quick``, section ``streaming``): a 1M-request stream
+through the constant-memory chunked-window driver must finish with
+per-chunk throughput >= 0.9x the 8x4000 single-shot steady state
+(``streaming_tput_ratio``), exactly ONE streaming compile key
+(``streaming_compile_keys`` — length-independent by construction), and
+peak RSS within ``STREAM_RSS_BUDGET_MB`` (``streaming_rss_mb``; the
+budget is recorded in the BENCH json for trajectory comparison — a
+length-dependent padded scan at this size would be gigabytes). The RSS
+bound is enforced only in ``--section streaming`` runs: peak RSS is
+process-wide, so other sections' allocations own it in a full run and
+the row is informational there.
 """
 from __future__ import annotations
 
@@ -37,6 +48,11 @@ EXEC_ROW = "executor_speed_overlap_speedup_x"
 EXEC_GATE = 1.5    # overlapped executor vs serial group loop, warm cache
 PCACHE_HITS_ROW = "executor_speed_pcache_second_hits"
 PCACHE_MISSES_ROW = "executor_speed_pcache_second_misses"
+STREAM_RATIO_ROW = "streaming_tput_ratio"
+STREAM_RATIO_GATE = 0.9   # stream vs 8x4000 single-shot steady throughput
+STREAM_KEYS_ROW = "streaming_compile_keys"
+STREAM_RSS_ROW = "streaming_rss_mb"
+STREAM_RSS_BUDGET_MB = 2048  # whole-process peak; O(chunk) driver state
 
 
 def _env_header() -> dict:
@@ -90,6 +106,7 @@ def main() -> None:
         if args.quick else paper.bench_policy_sweep,            # MC-policy VM
         "executor_speed": (lambda: paper.bench_executor_speed(6, 2000))
         if args.quick else paper.bench_executor_speed,          # PR 5 executor
+        "streaming": paper.bench_streaming,                     # PR 7 driver
         "lm_traces": paper.bench_lm_traces,                     # framework tie-in
         "kernels": kernels_bench.bench_kernels,
         "roofline": lambda: roofline.csv_rows(roofline.load_records("sp")),
@@ -126,7 +143,8 @@ def main() -> None:
         dt = time.perf_counter() - t0
         for r in rows:
             if r[0] in (STEADY_ROW, POLICY_ROW, EXEC_ROW,
-                        PCACHE_HITS_ROW, PCACHE_MISSES_ROW):
+                        PCACHE_HITS_ROW, PCACHE_MISSES_ROW,
+                        STREAM_RATIO_ROW, STREAM_KEYS_ROW, STREAM_RSS_ROW):
                 gate_values[r[0]] = float(r[1])
         report["sections"][name] = {
             "rows": [list(r) for r in rows],
@@ -169,6 +187,30 @@ def main() -> None:
         if not hits or misses is None or misses > 0:
             failures += 1
             print(f"_pcache_gate,FAIL,hits={hits},misses={misses}")
+    # streaming gates: throughput parity with the single-shot steady
+    # state, exactly one length-independent compile key, bounded RSS
+    if "streaming" in sections \
+            and not report["sections"]["streaming"]["error"]:
+        ratio = gate_values.get(STREAM_RATIO_ROW)
+        if ratio is None or ratio < STREAM_RATIO_GATE:
+            failures += 1
+            print(f"_streaming_gate,FAIL,{STREAM_RATIO_ROW}={ratio}")
+        keys = gate_values.get(STREAM_KEYS_ROW)
+        if keys is None or keys != 1:
+            failures += 1
+            print(f"_streaming_gate,FAIL,{STREAM_KEYS_ROW}={keys}")
+        # ru_maxrss is process-wide high-water: sections that ran before
+        # streaming (4 MiB rowclone traces, campaign sweeps) own the
+        # peak in a full run, so the budget is only enforceable when
+        # streaming runs alone (the BENCH_7.json protocol); the row
+        # stays informational otherwise
+        if args.section == "streaming":
+            rss = gate_values.get(STREAM_RSS_ROW)
+            if rss is None or rss > STREAM_RSS_BUDGET_MB:
+                failures += 1
+                print(f"_streaming_gate,FAIL,{STREAM_RSS_ROW}={rss}"
+                      f">budget={STREAM_RSS_BUDGET_MB}")
+        report["stream_rss_budget_mb"] = STREAM_RSS_BUDGET_MB
 
     report["cache_stats"] = emulator.cache_stats()
     report["failures"] = failures

@@ -32,6 +32,14 @@ keeps the old in-order loop for A/B). With more than one local device,
 each group's batch axis additionally shards via ``shard_map``
 (``emulator.set_sharding``).
 
+Unbounded workloads are one more grid axis: ``add(stream, sys,
+stream=True, chunk=...)`` accepts an iterable (or generator factory) of
+``Trace`` windows and routes through ``emulator.run_stream_many`` — the
+constant-memory chunked-window driver — so technique x workload sweeps
+can replay production-scale traces next to padded micro-traces in one
+campaign. Stream points group on ``(chunk, sys, mode, bloom-shape)``
+with no length bucket at all.
+
 Policy sweeps (PR 4) are one more grid axis: :meth:`Campaign.add_policy_grid`
 fans a trace out across a set of :class:`repro.core.smcprog.PolicyProgram`
 schedulers. Programs hash by instruction-table content, so each distinct
@@ -52,17 +60,32 @@ from repro.core.timescale import SystemConfig
 
 @dataclasses.dataclass
 class Point:
-    """One grid point. ``meta`` is carried through to the result."""
-    trace: Trace
+    """One grid point. ``meta`` is carried through to the result.
+
+    ``stream=True`` marks an unbounded point: ``trace`` is then a
+    Trace, an iterable of Trace windows, or a zero-arg callable
+    returning one, evaluated through the constant-memory
+    ``emulator.run_stream_many`` path in windows of ``chunk``
+    requests."""
+    trace: Any
     sys: SystemConfig
     mode: str = "ts"
     bloom: Optional[tuple] = None       # (words_u32, k, m_bits)
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    stream: bool = False
+    chunk: Optional[int] = None         # stream window size (stream only)
 
     def group_key(self) -> tuple:
         # emulator.group_key is the single source of truth for bucket /
         # mode / bloom-shape normalization; slot budget and batch axis
         # are derived per group inside the run_many call
+        if self.stream:
+            # no length bucket by construction: streamed points group on
+            # (chunk, sys, mode, bloom-shape) alone, whatever their size
+            chunk = self.chunk or emulator.DEFAULT_STREAM_CHUNK
+            return ("stream", chunk, self.sys,
+                    emulator._norm_mode(self.mode),
+                    emulator._bloom_shape(self.bloom))
         return emulator.group_key(self.trace.n, self.sys, self.mode,
                                   self.bloom)
 
@@ -79,12 +102,21 @@ class Campaign:
     def __init__(self) -> None:
         self.points: List[Point] = []
 
-    def add(self, trace: Trace, sys: SystemConfig, mode: str = "ts",
-            bloom: Optional[tuple] = None, **meta) -> "Campaign":
+    def add(self, trace, sys: SystemConfig, mode: str = "ts",
+            bloom: Optional[tuple] = None, stream: bool = False,
+            chunk: Optional[int] = None, **meta) -> "Campaign":
         # a real exception, not an assert: grid-driving scripts run
         # under `python -O` too, where asserts vanish silently
         emulator.check_mode(mode)
-        self.points.append(Point(trace, sys, mode, bloom, meta))
+        if not stream and not isinstance(trace, Trace):
+            raise ValueError(
+                f"non-stream points need a Trace, got "
+                f"{type(trace).__name__}; pass stream=True for "
+                f"iterables / generator factories")
+        if chunk is not None and not stream:
+            raise ValueError("chunk is a stream-point knob; pass stream=True")
+        self.points.append(Point(trace, sys, mode, bloom, meta,
+                                 stream=stream, chunk=chunk))
         return self
 
     def extend(self, traces: Sequence[Trace], sys: SystemConfig,
@@ -92,8 +124,9 @@ class Campaign:
                metas: Optional[Sequence[dict]] = None) -> "Campaign":
         traces = list(traces)
         metas = [{}] * len(traces) if metas is None else list(metas)
-        assert len(metas) == len(traces), \
-            f"metas ({len(metas)}) must match traces ({len(traces)})"
+        if len(metas) != len(traces):  # ValueError: survives python -O
+            raise ValueError(
+                f"metas ({len(metas)}) must match traces ({len(traces)})")
         for tr, m in zip(traces, metas):
             self.add(tr, sys, mode, bloom, **m)
         return self
@@ -124,7 +157,8 @@ class Campaign:
     def __len__(self) -> int:
         return len(self.points)
 
-    def run(self, serial: Optional[bool] = None) -> List[dict]:
+    def run(self, serial: Optional[bool] = None,
+            stream_collect: str = "aggregate") -> List[dict]:
         """Execute every point; one batched call per compile-key group.
 
         The default path prepares EVERY group up front (executable
@@ -139,13 +173,19 @@ class Campaign:
         campaigns or a 1-worker pool. Results are bit-identical either
         way, in ``add`` order: the emulator output dict plus the
         point's ``meta`` entries.
+
+        Stream points (``add(..., stream=True)``) execute through the
+        constant-memory window loop as their own tasks on the same
+        pool; ``stream_collect`` picks their output shape ('aggregate'
+        default — sweeps over unbounded traces should not retain
+        per-request arrays; 'full' for exact t_resp/t_issue).
         """
         groups: Dict[tuple, List[int]] = {}
         for i, p in enumerate(self.points):
             groups.setdefault(p.group_key(), []).append(i)
 
         results: List[Optional[dict]] = [None] * len(self.points)
-        tasks: List[executor.GroupTask] = []
+        tasks: List[Any] = []
         merges = []  # (campaign indices, points, per-group result list)
         for key, idxs in groups.items():
             pts = [self.points[i] for i in idxs]
@@ -156,9 +196,16 @@ class Campaign:
                 same = all(b.bloom is p0.bloom for b in pts)
                 blooms = p0.bloom if same else [p.bloom for p in pts]
             outs: List[Optional[dict]] = [None] * len(pts)
-            tasks += emulator.prepare_tasks([p.trace for p in pts], p0.sys,
-                                            [p.mode for p in pts], blooms,
-                                            outs)
+            if p0.stream:
+                tasks += emulator.prepare_stream_tasks(
+                    [p.trace for p in pts], p0.sys, [p.mode for p in pts],
+                    blooms, outs,
+                    chunk=p0.chunk or emulator.DEFAULT_STREAM_CHUNK,
+                    collect=stream_collect)
+            else:
+                tasks += emulator.prepare_tasks(
+                    [p.trace for p in pts], p0.sys, [p.mode for p in pts],
+                    blooms, outs)
             merges.append((idxs, pts, outs))
         executor.execute(tasks, serial=serial)
         for idxs, pts, outs in merges:

@@ -88,6 +88,16 @@ Entry points:
   O(bucket)-per-slot engine, kept only to pin bit-exactness and to
   measure the steady-state speedup in ``benchmarks/run.py --section
   sim_speed``.
+* :func:`run_stream` / :func:`run_stream_many` — constant-memory
+  streaming drivers for unbounded traces: the same slot body scans
+  fixed-size windows of ``chunk`` requests while an explicit
+  :class:`EmulatorState` carry (plus a ``halo`` of trailing trace
+  context) threads across windows. Compile keys depend only on
+  ``(chunk, halo, slots, batch, sys, mode, bloom-shape)`` — never on
+  total trace length — so a 1M-request stream holds exactly ONE cache
+  entry and runs in O(batch * window) device memory. Results are
+  bit-identical to single-shot :func:`run` on any size both support
+  (see the freeze-rule note on :func:`_stream_step_core`).
 
 Note on XLA:CPU: the thunk runtime (jaxlib >= 0.4.32 default) executes
 the tiny per-slot ops of this scan through its intra-op thread pool and
@@ -116,6 +126,9 @@ from repro.core.timescale import SystemConfig
 
 BIG = jnp.int32(2 ** 30)
 FP = 4096  # fixed-point denominator for tick<->cycle conversion
+# issue-frontier advances per scheduling slot; the streaming freeze rule
+# and halo sizing are derived from it, so it is a named constant
+_FRONTIER_UPTO = 4
 
 # donation is best-effort by design (see _batched_fn); the per-call
 # catch_warnings there is not thread-safe (process-global filter state),
@@ -187,7 +200,68 @@ class Trace:
                 jnp.asarray(self.dep))
 
 
-def _issue_frontier(t_issue, t_resp, queue, kindj, delta, dep, ptr, W, upto=4):
+@dataclasses.dataclass
+class EmulatorState:
+    """The complete scan carry of the emulation engine, as an explicit
+    pytree (registered dataclass) instead of an ad-hoc dict.
+
+    Everything the slot body threads from one scheduling slot to the
+    next lives here: the DRAM bank state machine, per-request issue /
+    response tags, the hardware request queue (request indices, -1 =
+    free), the in-order issue pointer, the two clock domains
+    (``mc_release`` in modeled proc cycles, ``dram_now`` in DRAM
+    ticks), and the served/hit/SMC counters. The policy VM is pure per
+    slot and Bloom words are read-only operands, so neither needs a
+    carry slot. Because the carry is explicit it can be paused,
+    serialized (:meth:`to_host` / :meth:`from_host`) and resumed — the
+    mechanism the streaming drivers (:func:`run_stream`) use to thread
+    one state across fixed-size trace windows. Index fields
+    (``t_issue`` / ``t_resp`` / ``queue`` / ``ptr``) are window-local
+    there; times stay absolute (int32 horizon ~2^30 cycles)."""
+    bank: dict              # DRAM bank state (dram.init_bank_state)
+    t_issue: jnp.ndarray    # int32 [N] issue tag per request
+    t_resp: jnp.ndarray     # int32 [N] response tag (BIG = unserved)
+    queue: jnp.ndarray      # int32 [Q] hardware request buffer
+    ptr: jnp.ndarray        # int32 in-order issue pointer
+    mc_release: jnp.ndarray  # time-scaling MC counter (proc cycles)
+    dram_now: jnp.ndarray   # DRAM real-time frontier (ticks)
+    hits: jnp.ndarray       # row-hit counter
+    served_n: jnp.ndarray   # serve-slot counter
+    smc_fpga_cycles: jnp.ndarray
+    last_bank: jnp.ndarray  # bank of the last served request
+
+    @staticmethod
+    def init(n: int, sys: SystemConfig) -> "EmulatorState":
+        """Fresh single-shot state for an n-request trace."""
+        return EmulatorState(
+            bank=dram.init_bank_state(sys.geometry),
+            t_issue=jnp.zeros((n,), jnp.int32),
+            t_resp=jnp.full((n,), BIG, jnp.int32),
+            queue=jnp.full((max(sys.window, 2),), -1, jnp.int32),
+            ptr=jnp.int32(0), mc_release=jnp.int32(0),
+            dram_now=jnp.int32(0), hits=jnp.int32(0),
+            served_n=jnp.int32(0), smc_fpga_cycles=jnp.int32(0),
+            last_bank=jnp.int32(-1))
+
+    def to_host(self) -> dict:
+        """Serializable nested dict of NumPy arrays (device -> host)."""
+        return jax.tree_util.tree_map(np.asarray, dataclasses.asdict(self))
+
+    @staticmethod
+    def from_host(d: dict) -> "EmulatorState":
+        """Inverse of :meth:`to_host`."""
+        return EmulatorState(**jax.tree_util.tree_map(jnp.asarray, dict(d)))
+
+
+_EMU_STATE_FIELDS = ("bank", "t_issue", "t_resp", "queue", "ptr",
+                     "mc_release", "dram_now", "hits", "served_n",
+                     "smc_fpga_cycles", "last_bank")
+jax.tree_util.register_dataclass(
+    EmulatorState, data_fields=list(_EMU_STATE_FIELDS), meta_fields=[])
+
+
+def _issue_frontier(t_issue, t_resp, queue, kindj, delta, dep, ptr, W,
+                    upto=4, gate=None):
     """Advance the in-order issue pointer by up to ``upto`` requests,
     pushing them into free hardware-queue slots. ``queue`` holds request
     indices (-1 = free); occupancy can never exceed the window W because
@@ -195,7 +269,9 @@ def _issue_frontier(t_issue, t_resp, queue, kindj, delta, dep, ptr, W, upto=4):
 
     O(1) work per advance: point gathers plus predicated point-scatters
     (``arr.at[i].set(where(can, new, arr[i]))`` — a self-write when the
-    advance is disabled), never full-length selects."""
+    advance is disabled), never full-length selects. ``gate`` (a traced
+    bool, streaming freeze) ANDs into every advance predicate, so a
+    gated-off call is the identity at the same O(1) cost."""
     N = t_issue.shape[0]
     for _ in range(upto):
         j = ptr
@@ -213,6 +289,8 @@ def _issue_frontier(t_issue, t_resp, queue, kindj, delta, dep, ptr, W, upto=4):
         slot = jnp.argmax(free).astype(jnp.int32)
         is_nop = kindj[jc] == 4  # NOP padding: resolve instantly, skip queue
         can = (j < N) & win_known & dep_known & (jnp.any(free) | is_nop)
+        if gate is not None:
+            can = can & gate
         t_new = jnp.maximum(jnp.maximum(base, win_t), dep_t)
         t_issue = t_issue.at[jc].set(jnp.where(can, t_new, t_issue[jc]))
         t_resp = t_resp.at[jc].set(jnp.where(can & is_nop, t_new, t_resp[jc]))
@@ -221,15 +299,30 @@ def _issue_frontier(t_issue, t_resp, queue, kindj, delta, dep, ptr, W, upto=4):
     return t_issue, t_resp, queue, ptr
 
 
-def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
-              bloom_words, bloom_k: int, bloom_m: int,
-              slots: Optional[int] = None):
-    """One trace's scan body. Pure traceable function (jit/vmap applied
-    by the compile cache below); ``sys``/``mode``/``bloom_k``/``bloom_m``
-    and the ``slots`` budget are Python-level constants baked into the
-    compiled program. Every per-slot state update is a predicated point
-    gather/scatter — O(Q)+O(1) work per slot (see module docstring)."""
-    N = kind.shape[0]
+def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
+                    mode: str, bloom_words, bloom_k: int, bloom_m: int,
+                    gate=None):
+    """Build the per-slot transition ``EmulatorState -> EmulatorState``
+    over one set of trace arrays. This is THE slot body: the single-shot
+    scan (:func:`_run_core`) and the streaming windows
+    (:func:`_stream_step_core`) both scan exactly this function, which
+    is what makes streamed results bit-identical to single-shot by
+    construction. ``sys`` / ``mode`` / ``bloom_k`` / ``bloom_m`` are
+    Python-level constants baked into the compiled program; every state
+    update is a predicated point gather/scatter — O(Q)+O(1) work per
+    slot (see module docstring).
+
+    ``gate`` is the streaming freeze hook: a callable ``state -> traced
+    bool``. When it returns False the step is the exact identity — the
+    gate ANDs into the frontier-advance and service predicates, so every
+    point-scatter self-writes and every scalar keeps its old value. This
+    is deliberately NOT a ``lax.cond`` around the body: under ``vmap`` a
+    batched-predicate cond lowers to both branches plus a select over
+    the whole O(L) carry per slot, which would demote the linear-time
+    core back to quadratic. Predicate-threading keeps frozen slots at
+    the same O(Q)+O(1) cost as live ones (and ``gate=None`` compiles to
+    exactly the pre-streaming program)."""
+    N = kindj.shape[0]
     t = sys.timing
     geo = sys.geometry
     W = sys.window
@@ -247,29 +340,13 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
     mc_lat = jnp.int32(0 if mode == "nots" else sys.hwmc_latency_proc)
     # a slow SMC batches up whatever arrived while it was busy (nots only)
     vis_slack = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots" else 0)
-
     Q = max(W, 2)
-    state = {
-        "bank": dram.init_bank_state(geo),
-        "t_issue": jnp.zeros((N,), jnp.int32),
-        "t_resp": jnp.full((N,), BIG, jnp.int32),
-        "queue": jnp.full((Q,), -1, jnp.int32),  # hardware request buffer
-        "ptr": jnp.int32(0),
-        "mc_release": jnp.int32(0),     # time-scaling MC counter (proc cycles)
-        "dram_now": jnp.int32(0),       # DRAM real-time frontier (ticks)
-        "hits": jnp.int32(0),
-        "served_n": jnp.int32(0),
-        "smc_fpga_cycles": jnp.int32(0),
-        "last_bank": jnp.int32(-1),     # bank of the last served request
-    }
 
-    kindj, bankj, rowj, deltaj, depj = kind, bank, row, delta, dep
-
-    def slot(state, _):
-        t_issue, t_resp = state["t_issue"], state["t_resp"]
+    def step(st: EmulatorState) -> EmulatorState:
+        live = None if gate is None else gate(st)
         t_issue, t_resp, queue, ptr = _issue_frontier(
-            t_issue, t_resp, state["queue"], kindj, deltaj, depj,
-            state["ptr"], W)
+            st.t_issue, st.t_resp, st.queue, kindj, deltaj, depj, st.ptr, W,
+            gate=live)
 
         # gather queued requests (O(Q), not O(N))
         qvalid = queue >= 0
@@ -278,20 +355,22 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         q_bank = bankj[qidx]
         q_row = rowj[qidx]
 
-        cutoff = state["mc_release"] + vis_slack
+        cutoff = st.mc_release + vis_slack
         visible = qvalid & (q_t <= cutoff)
         do = jnp.any(visible)
+        if live is not None:
+            do = do & live
 
         # ---- scheduling decision (int32-safe two-level argmin) ----
-        open_rows = state["bank"]["open_row"]
+        open_rows = st.bank["open_row"]
         hit_now = open_rows[q_bank] == q_row
         if policy is not None:
             # software-defined path: the policy VM stages the program's
             # instruction table into branchless O(Q) vector ops here
             qslot = smcprog.select_slot(policy, _policy_env(
                 q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
-                state["bank"]["ready"], state["dram_now"],
-                state["last_bank"], geo.n_banks, Q), visible)
+                st.bank["ready"], st.dram_now, st.last_bank,
+                geo.n_banks, Q), visible)
         else:
             key_all = jnp.where(visible, q_t, BIG)
             key_hit = jnp.where(visible & hit_now, q_t, BIG)
@@ -303,8 +382,8 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
 
         # ---- DRAM service (command-batch executor) ----
         # decision happens when the MC is free AND the request has arrived
-        decision_t = jnp.maximum(t_issue[pick], state["mc_release"])
-        dram_req_t = jnp.maximum(state["dram_now"],
+        decision_t = jnp.maximum(t_issue[pick], st.mc_release)
+        dram_req_t = jnp.maximum(st.dram_now,
                                  _mul_div(decision_t, FP, jnp.maximum(scale_num, 1)))
         trcd_eff = jnp.int32(t.tRCD)
         if use_bloom:
@@ -312,7 +391,7 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
             weakp = bloom_probe_jnp(bloom_words, bloom_m, bloom_k, gid[None])[0]
             trcd_eff = jnp.where(weakp, jnp.int32(t.tRCD), jnp.int32(t.tRCD_reduced))
         nbs, t_done, hit = dram.service_request(
-            state["bank"], t, kindj[pick], bankj[pick], rowj[pick],
+            st.bank, t, kindj[pick], bankj[pick], rowj[pick],
             dram_req_t, trcd_eff)
 
         # ---- time scaling: response consume-tag in modeled proc cycles.
@@ -321,13 +400,12 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         resp_t = _mul_div(t_done, scale_num, FP) + mc_lat
         resp_t = jnp.maximum(resp_t, decision_t + mc_issue)
 
-        state = dict(state)
         # bank state advances only at index b: merge the served bank's row
         # of the transition (plus the channel scalars) as predicated point
         # writes instead of whole-array selects
         b = bankj[pick]
-        bs = state["bank"]
-        state["bank"] = {
+        bs = st.bank
+        bank = {
             "open_row": bs["open_row"].at[b].set(
                 jnp.where(do, nbs["open_row"][b], bs["open_row"][b])),
             "ready": bs["ready"].at[b].set(
@@ -337,48 +415,65 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
             "bus_busy": jnp.where(do, nbs["bus_busy"], bs["bus_busy"]),
             "refs_done": jnp.where(do, nbs["refs_done"], bs["refs_done"]),
         }
-        state["t_resp"] = t_resp.at[pick].set(
-            jnp.where(do, resp_t, t_resp[pick]))
+        t_resp = t_resp.at[pick].set(jnp.where(do, resp_t, t_resp[pick]))
         queue = queue.at[qslot].set(jnp.where(do, -1, queue[qslot]))
-        state["dram_now"] = jnp.where(do, jnp.maximum(state["dram_now"], dram_req_t),
-                                      state["dram_now"])
-        state["hits"] = state["hits"] + jnp.where(do & hit, 1, 0)
-        state["served_n"] = state["served_n"] + jnp.where(do, 1, 0)
-        state["smc_fpga_cycles"] = state["smc_fpga_cycles"] + jnp.where(
-            do, sys.smc_cycles_per_decision + sys.smc_transfer_cycles, 0)
-        state["last_bank"] = jnp.where(do, bankj[pick], state["last_bank"])
         # MC busy until the next decision slot; idle hop to the next
         # arrival when nothing is visible — but only when something is
         # queued: hopping on an empty queue (mid-trace NOP run) would
         # saturate the counter to BIG-1 and poison every later response
         # (the pre-PR-4 idle-hop quirk)
         nxt = jnp.min(q_t)
+        may_hop = jnp.any(qvalid)
+        if live is not None:  # frozen slots must not idle-hop either
+            may_hop = may_hop & live
         idle = jnp.where(
-            jnp.any(qvalid),
-            jnp.maximum(state["mc_release"], jnp.minimum(nxt, BIG - 1)),
-            state["mc_release"])
-        state["mc_release"] = jnp.where(
-            do, jnp.maximum(state["mc_release"], decision_t + mc_issue), idle)
-        state["t_issue"], state["queue"], state["ptr"] = t_issue, queue, ptr
-        return state, None
+            may_hop,
+            jnp.maximum(st.mc_release, jnp.minimum(nxt, BIG - 1)),
+            st.mc_release)
+        return EmulatorState(
+            bank=bank, t_issue=t_issue, t_resp=t_resp, queue=queue, ptr=ptr,
+            mc_release=jnp.where(
+                do, jnp.maximum(st.mc_release, decision_t + mc_issue), idle),
+            dram_now=jnp.where(do, jnp.maximum(st.dram_now, dram_req_t),
+                               st.dram_now),
+            hits=st.hits + jnp.where(do & hit, 1, 0),
+            served_n=st.served_n + jnp.where(do, 1, 0),
+            smc_fpga_cycles=st.smc_fpga_cycles + jnp.where(
+                do, sys.smc_cycles_per_decision + sys.smc_transfer_cycles, 0),
+            last_bank=jnp.where(do, bankj[pick], st.last_bank))
 
+    return step
+
+
+def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
+              bloom_words, bloom_k: int, bloom_m: int,
+              slots: Optional[int] = None):
+    """One trace's single-shot scan: a fresh :class:`EmulatorState`
+    driven through the shared slot body (:func:`_make_slot_body`) for
+    the ``slots`` budget. Pure traceable function (jit/vmap applied by
+    the compile cache below)."""
+    N = kind.shape[0]
+    W = sys.window
+    step = _make_slot_body(kind, bank, row, delta, dep, sys, mode,
+                           bloom_words, bloom_k, bloom_m)
     length = (2 * N + 4) if slots is None else slots
-    state, _ = jax.lax.scan(slot, state, None, length=length)
+    state, _ = jax.lax.scan(lambda st, _: (step(st), None),
+                            EmulatorState.init(N, sys), None, length=length)
     # trailing frontier pass so post-memory compute counts
     t_issue, _, _, ptr = _issue_frontier(
-        state["t_issue"], state["t_resp"], state["queue"],
-        kindj, deltaj, depj, state["ptr"], W, upto=8)
-    valid = kindj != NOP
-    served_mask = state["t_resp"] < BIG
-    last_resp = jnp.max(jnp.where(valid & served_mask, state["t_resp"], 0))
+        state.t_issue, state.t_resp, state.queue,
+        kind, delta, dep, state.ptr, W, upto=8)
+    valid = kind != NOP
+    served_mask = state.t_resp < BIG
+    last_resp = jnp.max(jnp.where(valid & served_mask, state.t_resp, 0))
     last_issue = jnp.max(jnp.where(valid, t_issue, 0))
     return {
         "exec_cycles": jnp.maximum(last_resp, last_issue),
-        "row_hits": state["hits"],
-        "served": state["served_n"],
-        "dram_ticks": state["dram_now"],
-        "smc_fpga_cycles": state["smc_fpga_cycles"],
-        "t_resp": state["t_resp"],
+        "row_hits": state.hits,
+        "served": state.served_n,
+        "dram_ticks": state.dram_now,
+        "smc_fpga_cycles": state.smc_fpga_cycles,
+        "t_resp": state.t_resp,
         "t_issue": t_issue,
     }
 
@@ -548,7 +643,10 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
 def pad_trace(tr: Trace, n: int) -> Trace:
     """Pad with NOPs to length n (keeps jit caches warm across sizes)."""
     k = n - tr.n
-    assert k >= 0
+    if k < 0:  # ValueError, not assert: survives python -O
+        raise ValueError(
+            f"cannot pad a trace of length {tr.n} down to {n}: the "
+            f"target must be >= the trace length")
     z = np.zeros(k, np.int32)
     return Trace(kind=np.concatenate([tr.kind, z + 4]),
                  bank=np.concatenate([tr.bank, z]),
@@ -786,7 +884,11 @@ class _CachedRunner:
         # filter (a per-call catch_warnings here would race: it mutates
         # process-global filter state while workers may be executing)
         if not self.primed:
-            self.jitted(*(jnp.zeros(s, d) for s, d in self.avals))
+            # an aval entry is (shape, dtype) for an all-zeros dummy, or
+            # a zero-arg callable building a structured dummy (the
+            # streaming runners pass their initial StreamState this way)
+            self.jitted(*(a() if callable(a) else jnp.zeros(a[0], a[1])
+                          for a in self.avals))
             self.primed = True
         return self
 
@@ -890,13 +992,18 @@ def _normalize_blooms(blooms, n: int):
     if _is_bloom_triple(blooms):
         return tuple(blooms)
     blooms = [tuple(b) for b in blooms]
-    assert len(blooms) == n, "per-trace blooms must match len(traces)"
+    # real exceptions, not asserts: these guard public entry points
+    # (run_many / run_stream_many / Campaign) and must survive python -O
+    if len(blooms) != n:
+        raise ValueError(
+            f"per-trace blooms ({len(blooms)}) must match len(traces) ({n})")
     b0 = blooms[0]
-    assert all(_is_bloom_triple(b) and b[1] == b0[1] and b[2] == b0[2]
+    if not all(_is_bloom_triple(b) and b[1] == b0[1] and b[2] == b0[2]
                and np.asarray(b[0]).shape == np.asarray(b0[0]).shape
-               for b in blooms), \
-        "per-trace blooms must share (words-shape, k, m_bits); use " \
-        "Campaign to mix bloom/no-bloom points in one grid"
+               for b in blooms):
+        raise ValueError(
+            "per-trace blooms must share (words-shape, k, m_bits); use "
+            "Campaign to mix bloom/no-bloom points in one grid")
     return blooms
 
 
@@ -1054,3 +1161,563 @@ def run_ref(trace: Trace, sys: SystemConfig, mode: str = "ts",
             bloom: Optional[tuple] = None) -> dict:
     """Single-trace wrapper over :func:`run_ref_many` (see there)."""
     return run_ref_many([trace], sys, mode=mode, blooms=bloom)[0]
+
+
+# ---------------------------------------------------------------------------
+# Streaming chunked-window driver: constant memory, length-independent
+# compile keys, bit-identical to single-shot.
+#
+# The trace is consumed in windows of L = halo + chunk requests. Each
+# window step (a) shifts the carried arrays left by ``chunk`` (retiring
+# the ``chunk`` oldest entries, whose tags are provably final — see
+# below) and appends the fresh chunk, (b) runs the SHARED slot body
+# (:func:`_make_slot_body`) for a fixed per-window slot budget, with one
+# twist: a slot is executed only while ``ptr <= L - _FRONTIER_UPTO``
+# (the *freeze rule*), else it is an identity step. Freezing whole slots
+# — rather than letting the frontier run off the window's edge — means
+# the streamed slot sequence is exactly the single-shot slot sequence
+# with identity steps inserted, so every carried value is bit-identical
+# by induction; the inserted no-ops cost nothing but wall-clock.
+#
+# Finality of the retired prefix: after a window's scan, the freeze rule
+# guarantees ptr > L - _FRONTIER_UPTO, in-order issue bounds unserved
+# requests to indices >= ptr - window, and the halo satisfies
+# halo >= _FRONTIER_UPTO + window — so every entry below ``chunk`` is
+# issued AND served, and the window can emit its [0, chunk) slice as
+# final output (window k covers global [k*chunk - halo, (k+1)*chunk -
+# halo); the first ``halo`` emitted entries are the virtual warm-up
+# prefix and are dropped by the accumulator). The window that exhausts
+# the trace group ships with ``final=1``, lifting the freeze: its own
+# scan drains every carried entry (the slot budget covers a full fresh
+# chunk plus the halo, and chunk >= halo bounds the tail), and the
+# consumer keeps its whole [0, L) emission instead of the [0, chunk)
+# slice — no separate flush dispatch, same executable, same key.
+#
+# The carried halo holds the trailing ``halo = _FRONTIER_UPTO +
+# max(window, dep_max)`` requests: the deepest lookback the frontier
+# performs is max(window, dep) behind an issue point, and at a window
+# handoff up to _FRONTIER_UPTO - 1 entries may sit unissued behind
+# ``ptr``. The initial (virtual) halo is all-NOP with t_issue = 0 and
+# t_resp = -1, so the frontier's lookback terms ``t_resp[j-k] + 1``
+# evaluate to 0 — exactly the out-of-range defaults the single-shot
+# engine uses for j - k < 0.
+#
+# Times stay ABSOLUTE int32 (only indices are rebased by -chunk at each
+# shift), so a stream saturates at ~2^30 modeled cycles — a documented
+# horizon, checked at the accumulator (RuntimeError on wrap), not a
+# silent truncation.
+# ---------------------------------------------------------------------------
+
+DEFAULT_STREAM_CHUNK = 4096   # requests per window
+DEFAULT_STREAM_DEP = 8        # max dep lookback admitted into a stream
+
+
+@dataclasses.dataclass
+class StreamState:
+    """One stream's full inter-window carry: the :class:`EmulatorState`
+    plus the window's trace arrays (the tail ``halo`` of which is the
+    context the next window needs). A registered pytree, so the
+    streaming runner donates and rebuilds it in place each window."""
+    emu: EmulatorState
+    kind: jnp.ndarray     # int32 [L]
+    bank: jnp.ndarray     # int32 [L]
+    row: jnp.ndarray      # int32 [L]
+    delta: jnp.ndarray    # int32 [L]
+    dep: jnp.ndarray      # int32 [L]
+
+
+jax.tree_util.register_dataclass(
+    StreamState,
+    data_fields=["emu", "kind", "bank", "row", "delta", "dep"],
+    meta_fields=[])
+
+
+def stream_halo(sys: SystemConfig, dep_max: int = DEFAULT_STREAM_DEP) -> int:
+    """Carried-context length: the issue frontier looks back at most
+    ``max(window, dep)`` entries, plus up to ``_FRONTIER_UPTO - 1``
+    unissued entries may trail the pointer at a window handoff (and the
+    freeze slack is ``_FRONTIER_UPTO``)."""
+    return _FRONTIER_UPTO + max(int(sys.window), int(dep_max))
+
+
+def stream_slot_budget(chunk: int, sys: SystemConfig) -> int:
+    """Per-window slot budget: at most ``chunk + _FRONTIER_UPTO - 1``
+    requests become issuable in one window (the fresh chunk plus carried
+    unissued entries), each costing at most 2 slots (idle hop + serve),
+    plus queue-drain and freeze slack. The same budget covers the
+    freeze-lifted final window — fresh chunk (2*chunk) plus carried
+    queued entries (2*max(window, 2)) plus unissued stragglers and
+    slack (12) — so the tail drains with no extra dispatch. Surplus
+    slots freeze into identity steps, so any budget at or above the
+    exact one is bit-identical (same argument as :func:`slot_budget`)."""
+    return 2 * chunk + 2 * max(int(sys.window), 2) + 12
+
+
+def stream_compile_key(chunk: int, batch: int, sys: SystemConfig, mode: str,
+                       blooms=None,
+                       dep_max: int = DEFAULT_STREAM_DEP) -> tuple:
+    """Cache key of one streaming window executable. Everything here is
+    bounded by configuration — chunk, halo, slot budget, padded batch,
+    system config, normalized mode, bloom shape — and NOTHING depends on
+    total trace length: a 1M-request stream and a 10k-request stream on
+    the same config share one entry (the ``cache_stats`` regression in
+    tests/test_streaming.py pins this)."""
+    return ("stream", int(chunk), stream_halo(sys, dep_max),
+            stream_slot_budget(chunk, sys), _batch_bucket(batch), sys,
+            _norm_mode(mode), _bloom_shape(blooms))
+
+
+def _stream_init(chunk: int, halo: int, sys: SystemConfig,
+                 batch: Optional[int] = None) -> StreamState:
+    """Window-0 carry: an all-virtual window (NOP trace, t_issue=0,
+    t_resp=-1 — see the section comment) with ``ptr = L`` so the first
+    shift lands the pointer exactly on the first real request. With
+    ``batch``, every leaf gains a leading batch axis."""
+    L = chunk + halo
+    emu = EmulatorState.init(L, sys)
+    emu = dataclasses.replace(emu, t_resp=jnp.full((L,), -1, jnp.int32),
+                              ptr=jnp.int32(L))
+    z = jnp.zeros((L,), jnp.int32)
+    ss = StreamState(emu=emu, kind=jnp.full((L,), NOP, jnp.int32),
+                     bank=z, row=z, delta=z, dep=z)
+    if batch is None:
+        return ss
+    return jax.tree_util.tree_map(lambda a: jnp.stack([a] * batch), ss)
+
+
+def _stream_step_core(ss: StreamState, ck, cb, cr, cd, cdep, final,
+                      sys: SystemConfig, mode: str, bloom_words,
+                      bloom_k: int, bloom_m: int, chunk: int, slots: int):
+    """One window step (see the section comment for the correctness
+    argument): shift by ``chunk``, scan the freeze-gated shared slot
+    body for ``slots`` steps, and emit the whole [0, L) carry.
+    ``final`` is a traced scalar (an operand, NOT a compile-key
+    constant): the last real window sets it to lift the freeze so its
+    own scan drains the entire tail in-budget — no separate flush
+    dispatch (requires chunk >= halo, enforced by the driver, so the
+    final window's emission covers every still-carried entry)."""
+    C = chunk
+    L = ss.kind.shape[0]
+    kind = jnp.concatenate([ss.kind[C:], ck])
+    bank = jnp.concatenate([ss.bank[C:], cb])
+    row = jnp.concatenate([ss.row[C:], cr])
+    delta = jnp.concatenate([ss.delta[C:], cd])
+    dep = jnp.concatenate([ss.dep[C:], cdep])
+    e = ss.emu
+    emu = dataclasses.replace(
+        e,
+        t_issue=jnp.concatenate([e.t_issue[C:], jnp.zeros((C,), jnp.int32)]),
+        t_resp=jnp.concatenate([e.t_resp[C:], jnp.full((C,), BIG, jnp.int32)]),
+        # queue entries and the pointer are window-local indices: rebase
+        # (carried live entries are >= C — they sit in the halo)
+        queue=jnp.where(e.queue >= 0, e.queue - C, e.queue),
+        ptr=e.ptr - C)
+
+    # freeze rule: a slot only executes while the frontier cannot run off
+    # the loaded window (or during the lifted flush). Threaded through the
+    # body's predicates — NOT a lax.cond, which vmap would lower to both
+    # branches + an O(L) select over the carry per slot (see
+    # _make_slot_body); frozen slots cost the same O(Q)+O(1) as live ones.
+    live_cut = jnp.int32(L - _FRONTIER_UPTO)
+    lifted = final != 0
+    step = _make_slot_body(kind, bank, row, delta, dep, sys, mode,
+                           bloom_words, bloom_k, bloom_m,
+                           gate=lambda st: lifted | (st.ptr <= live_cut))
+    emu, _ = jax.lax.scan(lambda st, _: (step(st), None), emu, None,
+                          length=slots)
+    # emit the full [0, L) carry every window: the consumer slices
+    # [0, chunk) for interior windows and keeps everything for the
+    # final (freeze-lifted) one — constant shapes, ONE executable
+    out = (kind, emu.t_issue, emu.t_resp, emu.ptr)
+    return StreamState(emu=emu, kind=kind, bank=bank, row=row,
+                       delta=delta, dep=dep), out
+
+
+def _build_stream_runner(key: tuple) -> "_CachedRunner":
+    """Construct the (lazily-compiled) window-step runner for one
+    streaming cache key: :func:`_stream_step_core` vmapped over the
+    padded batch axis, jitted with the carried :class:`StreamState` and
+    the freshly-staged chunk arrays donated (constant device memory —
+    each window rebuilds the carry in place)."""
+    _, C, H, SL, bb, sys, mode, bshape = key
+
+    if bshape is None:
+        def fn(ss, ck, cb, cr, cd, cdep, is_final):
+            def one(s, a, b, c, d, e):
+                return _stream_step_core(s, a, b, c, d, e, is_final,
+                                         sys, mode, None, 0, 1, C, SL)
+            return jax.vmap(one)(ss, ck, cb, cr, cd, cdep)
+    else:
+        stacked, _, bk, bm = bshape
+        words_axis = 0 if stacked == "stacked" else None
+
+        def fn(ss, ck, cb, cr, cd, cdep, is_final, words):
+            def one(s, a, b, c, d, e, w):
+                return _stream_step_core(s, a, b, c, d, e, is_final,
+                                         sys, mode, w, bk, bm, C, SL)
+            return jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, words_axis))(
+                ss, ck, cb, cr, cd, cdep, words)
+
+    jitted = jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4, 5))
+    avals = [lambda: _stream_init(C, H, sys, batch=bb)] + \
+        [((bb, C), jnp.int32)] * 5 + [((), jnp.int32)]
+    if bshape is not None:
+        wshape = (bshape[1],) if bshape[0] == "shared" else (bb, bshape[1])
+        avals = avals + [(wshape, jnp.uint32)]
+    return _CachedRunner(jitted, avals)
+
+
+def _stream_fn(key: tuple) -> "_CachedRunner":
+    """Get-or-build the streaming runner for ``key`` in the SAME
+    module-level LRU as the batched executables (same lock, same
+    hit/miss/eviction counters — the ``"stream"`` tag namespaces the
+    keys)."""
+    with _CACHE_LOCK:
+        fn = _COMPILE_CACHE.get(key)
+        if fn is not None:
+            _CACHE_STATS["hits"] += 1
+            _COMPILE_CACHE.move_to_end(key)
+            return fn
+        _CACHE_STATS["misses"] += 1
+        runner = _build_stream_runner(key)
+        _COMPILE_CACHE[key] = runner
+        while len(_COMPILE_CACHE) > _CACHE_CAP:
+            _COMPILE_CACHE.popitem(last=False)
+            _CACHE_STATS["evictions"] += 1
+    return runner
+
+
+def _nop_fields(k: int) -> tuple:
+    z = np.zeros(k, np.int32)
+    return (np.full(k, NOP, np.int32), z, z, z, z)
+
+
+class _Chunker:
+    """Re-buffer an arbitrary stream of :class:`Trace` windows into
+    exact ``chunk``-sized int32 field blocks, NOP-padding past the end.
+    Accepts a single Trace, an iterable of Traces, or a zero-arg
+    callable returning one (a generator factory). Holds O(chunk +
+    largest yielded window) host memory — never the whole stream."""
+
+    __slots__ = ("it", "chunk", "dep_max", "parts", "buffered",
+                 "exhausted", "n")
+
+    def __init__(self, stream, chunk: int, dep_max: int):
+        if isinstance(stream, Trace):
+            stream = (stream,)
+        elif callable(stream):
+            stream = stream()
+        self.it = iter(stream)
+        self.chunk = chunk
+        self.dep_max = dep_max
+        self.parts: list = []    # pending (kind, bank, row, delta, dep)
+        self.buffered = 0
+        self.exhausted = False
+        self.n = 0               # total requests pulled (incl. user NOPs)
+
+    @property
+    def done(self) -> bool:
+        return self.exhausted and self.buffered == 0
+
+    def _pull(self) -> None:
+        try:
+            tr = next(self.it)
+        except StopIteration:
+            self.exhausted = True
+            return
+        if not isinstance(tr, Trace):
+            raise TypeError(
+                f"streams must yield Trace windows, got {type(tr).__name__}")
+        dep = np.asarray(tr.dep, np.int32)
+        if dep.size and (int(dep.max()) > self.dep_max or int(dep.min()) < 0):
+            raise ValueError(
+                f"stream window has dep={int(dep.max())} outside "
+                f"[0, dep_max={self.dep_max}]; raise dep_max (grows the "
+                f"carried halo) or re-author the trace")
+        self.parts.append(tuple(
+            np.asarray(getattr(tr, f), np.int32)
+            for f in ("kind", "bank", "row", "delta", "dep")))
+        self.buffered += tr.n
+        self.n += tr.n
+
+    def next_block(self) -> tuple:
+        """The next ``chunk`` requests as (kind, bank, row, delta, dep)
+        arrays; all-NOP once the stream is exhausted."""
+        while self.buffered < self.chunk and not self.exhausted:
+            self._pull()
+        fields: list = [[] for _ in range(5)]
+        need = self.chunk
+        while need and self.parts:
+            part = self.parts[0]
+            take = min(need, part[0].shape[0])
+            for f, arr in zip(fields, part):
+                f.append(arr[:take])
+            if take == part[0].shape[0]:
+                self.parts.pop(0)
+            else:
+                self.parts[0] = tuple(arr[take:] for arr in part)
+            self.buffered -= take
+            need -= take
+        if need:
+            for f, p in zip(fields, _nop_fields(need)):
+                f.append(p)
+        return tuple(np.concatenate(f) if len(f) != 1 else f[0]
+                     for f in fields)
+
+
+class _StreamAccum:
+    """Per-stream output accumulator over emitted window blocks.
+
+    ``collect='aggregate'`` keeps O(1) state: int64-exact latency sums
+    plus running maxima (for int32-range values np.mean's float64
+    pairwise sum is exact too, so the reported mean is identical to the
+    full-mode one). ``collect='full'`` additionally retains every
+    emitted block and reassembles exact per-request ``t_issue`` /
+    ``t_resp`` arrays — drop-in comparable with single-shot
+    :func:`run`, at O(stream length) host memory."""
+
+    __slots__ = ("collect", "halo", "blocks", "n_requests", "lat_sum",
+                 "last_resp", "last_issue")
+
+    def __init__(self, collect: str, halo: int):
+        self.collect = collect
+        self.halo = halo
+        self.blocks: list = []
+        self.n_requests = 0
+        self.lat_sum = 0
+        self.last_resp = 0
+        self.last_issue = 0
+
+    def feed(self, kind_blk, issue_blk, resp_blk) -> None:
+        valid = kind_blk != NOP  # virtual-halo and padding entries are NOP
+        if valid.any():
+            resp = resp_blk[valid].astype(np.int64)
+            issue = issue_blk[valid].astype(np.int64)
+            if (resp >= int(BIG)).any() or (resp < 0).any():
+                raise RuntimeError(
+                    "streaming invariant violated: a retired window slice "
+                    "holds an unserved or time-wrapped request (t_resp "
+                    "outside [0, 2^30)) — slot budget or int32 time "
+                    "horizon exceeded")
+            self.n_requests += int(valid.sum())
+            self.lat_sum += int((resp - issue).sum())
+            self.last_resp = max(self.last_resp, int(resp.max()))
+            self.last_issue = max(self.last_issue, int(issue.max()))
+        if self.collect == "full":
+            self.blocks.append((np.asarray(kind_blk),
+                                np.asarray(issue_blk),
+                                np.asarray(resp_blk)))
+
+    def result(self, n: int, hits: int, served: int, dram_ticks: int,
+               smc: int, sys: SystemConfig, mode: str) -> dict:
+        if served != self.n_requests:
+            raise RuntimeError(
+                f"streaming invariant violated: {served} serve slots vs "
+                f"{self.n_requests} retired non-NOP requests")
+        exec_cycles = max(self.last_resp, self.last_issue)
+        out = {
+            "exec_cycles": np.int32(exec_cycles),
+            "row_hits": np.int32(hits),
+            "served": np.int32(served),
+            "dram_ticks": np.int32(dram_ticks),
+            "smc_fpga_cycles": np.int32(smc),
+            "exec_seconds": sys.cycles_to_seconds(exec_cycles, mode),
+            "mode": mode,
+            "n_requests": self.n_requests,
+        }
+        if self.collect == "full":
+            H = self.halo
+            kind = np.concatenate([b[0] for b in self.blocks])[H:H + n]
+            t_issue = np.concatenate([b[1] for b in self.blocks])[H:H + n]
+            t_resp = np.concatenate([b[2] for b in self.blocks])[H:H + n]
+            lat = t_resp - t_issue
+            ok = (kind != NOP) & (t_resp < int(BIG))
+            out["avg_load_latency_cycles"] = \
+                float(lat[ok].mean()) if ok.any() else 0.0
+            out["t_resp"] = t_resp
+            out["t_issue"] = t_issue
+        else:
+            out["avg_load_latency_cycles"] = \
+                self.lat_sum / self.n_requests if self.n_requests else 0.0
+        return out
+
+
+def prepare_stream_tasks(streams: Sequence, sys: SystemConfig,
+                         mode: Union[str, Sequence[str]], blooms,
+                         results: List[Optional[dict]],
+                         chunk: int = DEFAULT_STREAM_CHUNK,
+                         dep_max: int = DEFAULT_STREAM_DEP,
+                         collect: str = "full",
+                         ) -> List["executor.StreamTask"]:
+    """Plan a :func:`run_stream_many` call into executable
+    :class:`repro.core.executor.StreamTask`s WITHOUT running them —
+    the streaming analogue of :func:`prepare_tasks`: grouping (by
+    normalized mode only — there is no length bucket, that is the
+    point), runner resolution and priming on the caller's thread, and
+    closures that feed windows / consume emitted blocks / finalize
+    per-stream records into disjoint ``results`` slots."""
+    streams = list(streams)
+    n = len(streams)
+    modes = _check_modes([mode] * n if isinstance(mode, str) else mode, n)
+    blooms = _normalize_blooms(blooms, n)
+    H = stream_halo(sys, dep_max)
+    if not isinstance(chunk, (int, np.integer)) or isinstance(chunk, bool) \
+            or chunk < H:
+        raise ValueError(
+            f"stream chunk must be an int >= halo ({H} = {_FRONTIER_UPTO} "
+            f"+ max(window={sys.window}, dep_max={dep_max})) so the final "
+            f"window drains the whole tail in-budget, got {chunk!r}")
+    if collect not in ("full", "aggregate"):
+        raise ValueError(
+            f"collect must be 'full' or 'aggregate', got {collect!r}")
+    chunk = int(chunk)
+    SL = stream_slot_budget(chunk, sys)
+    L = chunk + H
+
+    groups: dict = {}
+    for i in range(n):
+        groups.setdefault(_norm_mode(modes[i]), []).append(i)
+
+    tasks: List[executor.StreamTask] = []
+    for gmode, idxs in groups.items():
+        key = stream_compile_key(chunk, len(idxs), sys, gmode, blooms,
+                                 dep_max)
+        fn = _stream_fn(key).prime()
+        bb = _batch_bucket(len(idxs))
+        if blooms is None:
+            wargs = ()
+        elif isinstance(blooms, tuple):
+            wargs = (jnp.asarray(blooms[0]),)
+        else:
+            words = np.stack([np.asarray(blooms[i][0]) for i in idxs])
+            if bb > len(idxs):
+                words = np.concatenate(
+                    [words, np.repeat(words[:1], bb - len(idxs), axis=0)])
+            wargs = (jnp.asarray(words),)
+
+        def pack(idxs=idxs, bb=bb):
+            ctx = {
+                "chunkers": [_Chunker(streams[i], chunk, dep_max)
+                             for i in idxs],
+                "accs": [_StreamAccum(collect, H) for _ in idxs],
+                # index of the freeze-lifted final window; written by
+                # windows() BEFORE that window's args are queued, so the
+                # (possibly prefetching) consumer always sees it in time
+                "final_idx": None,
+                "fed": 0,
+            }
+            return _stream_init(chunk, H, sys, batch=bb), ctx
+
+        def windows(ctx, bb=bb, wargs=wargs):
+            # the window whose assembly exhausts every chunker is the
+            # final one: it ships with the freeze LIFTED (final=1) and
+            # drains the whole tail in-budget — no separate flush
+            # dispatch (SL covers a full fresh chunk plus the carried
+            # halo, the exact worst case)
+            chunkers = ctx["chunkers"]
+            filler = _nop_fields(chunk)
+            k = 0
+            while not all(c.done for c in chunkers):
+                blocks = [c.next_block() for c in chunkers]
+                blocks += [filler] * (bb - len(blocks))
+                final = all(c.done for c in chunkers)
+                if final:
+                    ctx["final_idx"] = k
+                yield tuple(
+                    jnp.asarray(np.stack([b[i] for b in blocks]))
+                    for i in range(5)) + (jnp.int32(final),) + wargs
+                k += 1
+            if k == 0:  # every stream empty: one all-NOP final window
+                ctx["final_idx"] = 0
+                blocks = [filler] * bb
+                yield tuple(
+                    jnp.asarray(np.stack([b[i] for b in blocks]))
+                    for i in range(5)) + (jnp.int32(1),) + wargs
+
+        def consume(out, ctx, idxs=idxs):
+            kind_blk, issue_blk, resp_blk, ptr = out
+            final = ctx["final_idx"] == ctx["fed"]
+            ctx["fed"] += 1
+            # interior windows retire exactly [0, chunk); the final one
+            # keeps its whole [0, L) carry (tail included — that is the
+            # flush)
+            keep = L if final else chunk
+            for j, acc in enumerate(ctx["accs"]):
+                acc.feed(kind_blk[j, :keep], issue_blk[j, :keep],
+                         resp_blk[j, :keep])
+            if not final:
+                lag = ptr[:len(idxs)] <= (L - _FRONTIER_UPTO)
+                if lag.any():
+                    raise RuntimeError(
+                        f"streaming invariant violated: issue frontier "
+                        f"fell behind the window "
+                        f"(ptr={ptr[:len(idxs)].tolist()}, window={L}, "
+                        f"slots={SL}) — slot budget too small")
+
+        def finalize(final_state, ctx, idxs=idxs):
+            e = final_state.emu
+            hits = np.asarray(e.hits)
+            served = np.asarray(e.served_n)
+            dram_now = np.asarray(e.dram_now)
+            smc = np.asarray(e.smc_fpga_cycles)
+            for j, i in enumerate(idxs):
+                results[i] = ctx["accs"][j].result(
+                    ctx["chunkers"][j].n, int(hits[j]), int(served[j]),
+                    int(dram_now[j]), int(smc[j]), sys, modes[i])
+
+        tasks.append(executor.StreamTask(
+            fn=fn, pack=pack, windows=windows, consume=consume,
+            finalize=finalize, label=f"stream:c{chunk}x{len(idxs)}:{gmode}",
+            cost=SL * bb))
+    return tasks
+
+
+def run_stream_many(streams: Sequence, sys: SystemConfig,
+                    mode: Union[str, Sequence[str]] = "ts", blooms=None,
+                    chunk: int = DEFAULT_STREAM_CHUNK,
+                    dep_max: int = DEFAULT_STREAM_DEP,
+                    collect: str = "full",
+                    serial: Optional[bool] = None) -> List[dict]:
+    """Evaluate many UNBOUNDED traces under one ``SystemConfig`` in
+    lockstep constant-memory windows.
+
+    Each stream is a :class:`Trace`, an iterable of Trace windows, or a
+    zero-arg callable returning one (a generator factory) — total
+    length need not be known, and with an iterator input it is never
+    materialized. Streams sharing a normalized mode batch into ONE
+    window executable whose compile key (:func:`stream_compile_key`)
+    is independent of trace length; exhausted streams idle on NOP
+    windows until the whole group drains, and the window that exhausts
+    the group ships with the freeze lifted so its own scan retires
+    every tail — no extra flush dispatch. Device memory is
+    O(batch * (chunk + halo));
+    host memory is O(chunk) per stream with ``collect='aggregate'``
+    (exact int64 aggregates only) or O(length) with the default
+    ``collect='full'`` (adds exact per-request ``t_resp`` /
+    ``t_issue``).
+
+    Results are bit-identical to single-shot :func:`run` /
+    :func:`run_many` on any trace both paths support, for every chunk
+    size >= the halo — pinned by tests/test_streaming.py and the
+    hypothesis property in tests/test_property.py. ``dep_max`` bounds
+    admissible ``dep`` lookbacks (it sizes the carried halo); times
+    saturate at the int32 horizon (~2^30 modeled cycles), checked at
+    the accumulator."""
+    streams = list(streams)
+    results: List[Optional[dict]] = [None] * len(streams)
+    tasks = prepare_stream_tasks(streams, sys, mode, blooms, results,
+                                 chunk=chunk, dep_max=dep_max,
+                                 collect=collect)
+    executor.execute(tasks, serial=serial)
+    return results
+
+
+def run_stream(stream, sys: SystemConfig, mode: str = "ts",
+               bloom: Optional[tuple] = None,
+               chunk: int = DEFAULT_STREAM_CHUNK,
+               dep_max: int = DEFAULT_STREAM_DEP,
+               collect: str = "full") -> dict:
+    """Single-stream wrapper over :func:`run_stream_many` (see there)."""
+    return run_stream_many([stream], sys, mode=mode, blooms=bloom,
+                           chunk=chunk, dep_max=dep_max,
+                           collect=collect)[0]

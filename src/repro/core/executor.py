@@ -41,7 +41,7 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["GroupTask", "execute", "set_workers", "workers"]
+__all__ = ["GroupTask", "StreamTask", "execute", "set_workers", "workers"]
 
 
 @dataclasses.dataclass
@@ -67,6 +67,83 @@ class GroupTask:
         out = self.fn(*args)                         # device: the scan
         out = {k: np.asarray(v) for k, v in out.items()}  # gather (blocks)
         self.finalize(out, ctx)
+
+
+@dataclasses.dataclass
+class StreamTask:
+    """One streaming compile-key group: a window loop instead of a
+    single dispatch (see ``repro.core.emulator.prepare_stream_tasks``).
+
+    ``pack`` builds the initial carried state plus a host context;
+    ``windows(ctx)`` yields one argument tuple per trace window (the
+    last one freeze-lifted to drain the tail in place);
+    ``fn(state, *args)`` is the resolved window
+    executable returning ``(new_state, emitted)``; ``consume`` receives
+    each window's gathered NumPy emission; ``finalize`` receives the
+    final carried state. The loop is inherently serial per task — state
+    threads window to window — but host and device still overlap WITHIN
+    it: window assembly (trace generation / file parsing, ``np.stack``,
+    staging) runs on a dedicated prefetch thread one window ahead while
+    the current window is inside XLA (which releases the GIL for the
+    whole execution — the same observation the group-level pool is
+    built on). The prefetch queue is bounded, so a stream holds at most
+    ``_PREFETCH`` staged windows at once — constant memory, whatever
+    the trace length. The executor additionally overlaps DIFFERENT
+    stream/group tasks across workers. Same determinism contract as
+    :class:`GroupTask`: disjoint result slots, prepared on the
+    caller's thread; prefetch changes wall-clock interleaving only,
+    never the window sequence."""
+    fn: Callable[..., Any]
+    pack: Callable[[], Tuple[Any, Any]]
+    windows: Callable[[Any], Any]        # ctx -> iterable of arg tuples
+    consume: Callable[[tuple, Any], None]
+    finalize: Callable[[Any, Any], None]
+    label: str = ""
+    cost: int = 0
+
+    _PREFETCH = 2  # max staged windows in flight (bounds memory)
+
+    def run(self) -> None:
+        import queue as _queue
+
+        state, ctx = self.pack()
+        q: _queue.Queue = _queue.Queue(maxsize=self._PREFETCH)
+        done, stop = object(), threading.Event()
+
+        def put(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except _queue.Full:
+                    continue
+            return False
+
+        def feed() -> None:
+            try:
+                for args in self.windows(ctx):
+                    if not put(args):
+                        return          # consumer bailed; stop generating
+                put(done)
+            except BaseException as e:  # surface on the consuming thread
+                put(e)
+
+        th = threading.Thread(target=feed, daemon=True,
+                              name="repro-stream-prefetch")
+        th.start()
+        try:
+            while True:
+                args = q.get()
+                if args is done:
+                    break
+                if isinstance(args, BaseException):
+                    raise args
+                state, out = self.fn(state, *args)   # device: one window
+                self.consume(tuple(np.asarray(o) for o in out), ctx)
+        finally:
+            stop.set()                  # unblocks a feeder mid-put
+            th.join(timeout=5.0)
+        self.finalize(state, ctx)
 
 
 def _env_int(name: str, default: int) -> int:
@@ -124,7 +201,7 @@ def _pool() -> ThreadPoolExecutor:
         return _POOL
 
 
-def execute(tasks: Sequence[GroupTask], serial: Optional[bool] = None) -> None:
+def execute(tasks: Sequence[Any], serial: Optional[bool] = None) -> None:
     """Run every task; overlapped across the worker pool unless
     ``serial`` (or a single task / single worker) forces the in-order
     loop. Tasks were prepared in submission order on the caller's

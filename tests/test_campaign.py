@@ -290,7 +290,9 @@ class TestSlotBudget:
 class TestApiEdges:
     def test_extend_rejects_short_metas(self):
         c = Campaign()
-        with pytest.raises(AssertionError, match="metas"):
+        # ValueError, not AssertionError: the guard survives python -O
+        # and reports both lengths
+        with pytest.raises(ValueError, match="metas \\(1\\).*traces \\(3\\)"):
             c.extend(mixed_traces(3), JETSON_NANO, metas=[{"a": 1}])
         assert len(c) == 0  # nothing silently added
 

@@ -187,6 +187,40 @@ def test_overlapped_executor_bit_identical_to_serial(seed, force_shard):
 
 
 @settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 200),
+       st.integers(8, 64), st.sampled_from([1, 2, 4]),
+       st.sampled_from(["ts", "nots", "reference"]), st.integers(0, 60))
+def test_stream_bit_identical_to_single_shot(seed, n, chunk, window, mode,
+                                             nop_run):
+    """ISSUE 7 anchor: the constant-memory chunked-window driver
+    (`run_stream`) must equal the single-shot `run` bit-for-bit on any
+    trace both support — across random chunk sizes (so chunk boundaries
+    land anywhere, including inside dependency windows and mid-trace
+    NOP runs), windows, and modes. The frozen-slot handoff makes the
+    streamed slot sequence the single-shot sequence with identity steps
+    inserted; this property is the empirical pin of that argument."""
+    import dataclasses
+    from repro.core import emulator
+    rng = np.random.RandomState(seed % (2 ** 31))
+    kind = rng.randint(0, 5, n)
+    if nop_run and n > nop_run:  # idle gap crossing chunk boundaries
+        at = int(rng.randint(0, n - nop_run))
+        kind[at:at + nop_run] = 4
+    tr = Trace.of(kind=kind, bank=rng.randint(0, 16, n),
+                  row=rng.randint(0, 4096, n), delta=rng.randint(0, 24, n),
+                  dep=rng.randint(0, 3, n))
+    sysc = dataclasses.replace(JETSON_NANO, window=window)
+    a = run(tr, sysc, mode)
+    s = emulator.run_stream(tr, sysc, mode, chunk=chunk, dep_max=3)
+    for k in ("exec_cycles", "row_hits", "served", "dram_ticks",
+              "smc_fpga_cycles"):
+        assert int(a[k]) == int(s[k]), k
+    assert a["avg_load_latency_cycles"] == s["avg_load_latency_cycles"]
+    np.testing.assert_array_equal(a["t_resp"][:n], s["t_resp"])
+    np.testing.assert_array_equal(a["t_issue"][:n], s["t_issue"])
+
+
+@settings(max_examples=10, deadline=None)
 @given(st.integers(0, 1000))
 def test_emulator_deterministic(seed):
     rng = np.random.RandomState(seed)

@@ -1,0 +1,403 @@
+"""Streaming chunked-window driver: bit-identity with single-shot,
+length-independent compile keys, trace-file ingestion, error paths.
+
+The anchor contract (ISSUE 7): ``run_stream(chunks) == run(whole)``
+bit-for-bit on any size both paths support — across chunk sizes, modes,
+windows, deps, mid-trace NOP runs, Bloom arms and policy programs —
+while a stream's compile key never depends on total trace length.
+hypothesis widens the same properties when installed
+(tests/test_property.py); the randomized sweeps here run everywhere.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import emulator, smcprog, traces
+from repro.core.bloom import BloomFilter
+from repro.core.cachesim import LLC
+from repro.core.emulator import (
+    BIG, EmulatorState, Trace, run, run_many, run_ref, run_stream,
+    run_stream_many)
+from repro.core.timescale import JETSON_NANO
+
+GEO = JETSON_NANO.geometry
+
+AGG_KEYS = ("exec_cycles", "row_hits", "served", "dram_ticks",
+            "smc_fpga_cycles")
+
+
+def random_trace(rng, n, kinds=5, dep_max=3, nop_run=0):
+    kind = rng.randint(0, kinds, n)
+    if nop_run and n > nop_run:
+        at = int(rng.randint(0, n - nop_run))
+        kind[at:at + nop_run] = 4
+    return Trace.of(kind=kind, bank=rng.randint(0, 16, n),
+                    row=rng.randint(0, 4096, n),
+                    delta=rng.randint(0, 24, n),
+                    dep=rng.randint(0, dep_max + 1, n))
+
+
+def assert_stream_equal(single, streamed, n):
+    for k in AGG_KEYS:
+        assert int(single[k]) == int(streamed[k]), k
+    assert single["avg_load_latency_cycles"] == \
+        streamed["avg_load_latency_cycles"]
+    assert single["exec_seconds"] == streamed["exec_seconds"]
+    if "t_resp" in streamed:
+        np.testing.assert_array_equal(single["t_resp"][:n],
+                                      streamed["t_resp"])
+        np.testing.assert_array_equal(single["t_issue"][:n],
+                                      streamed["t_issue"])
+
+
+# ---------------------------------------------------------------------------
+# bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,chunk,window,mode", [
+    (5, 16, 4, "ts"),          # stream shorter than one chunk
+    (31, 12, 1, "ts"),         # W=1, chunk straddles nothing evenly
+    (33, 16, 2, "nots"),       # bucket-boundary length
+    (100, 16, 4, "reference"),
+    (257, 32, 8, "ts"),        # deep window
+    (640, 100, 4, "nots"),     # non-power-of-two chunk
+])
+def test_stream_bit_identical_to_run(n, chunk, window, mode):
+    rng = np.random.RandomState(n * 7 + chunk)
+    tr = random_trace(rng, n)
+    sysc = dataclasses.replace(JETSON_NANO, window=window)
+    a = run(tr, sysc, mode)
+    s = run_stream(tr, sysc, mode, chunk=chunk)
+    assert int(a["served"]) == tr.n_real
+    assert_stream_equal(a, s, n)
+
+
+def test_stream_randomized_chunk_boundaries():
+    """Many random (length, chunk) pairs, incl. mid-trace NOP runs that
+    cross chunk boundaries — the no-hypothesis version of the property
+    in tests/test_property.py."""
+    rng = np.random.RandomState(0)
+    for _ in range(10):
+        n = int(rng.randint(1, 400))
+        chunk = int(rng.randint(8, 64))
+        nop_run = int(rng.randint(0, 80)) if n > 100 else 0
+        tr = random_trace(rng, n, nop_run=nop_run)
+        w = int(rng.choice([1, 2, 4]))
+        sysc = dataclasses.replace(
+            JETSON_NANO, window=w,
+            scheduler=str(rng.choice(["frfcfs", "fcfs"])))
+        a = run(tr, sysc, "ts")
+        s = run_stream(tr, sysc, "ts", chunk=chunk)
+        assert_stream_equal(a, s, n)
+
+
+def test_stream_matches_reference_engine():
+    """run_ref A/B at small sizes — the acceptance criterion's anchor:
+    the streamed result equals the kept pre-optimization engine too."""
+    rng = np.random.RandomState(3)
+    tr = random_trace(rng, 48)
+    for mode in ("ts", "nots", "reference"):
+        r = run_ref(tr, JETSON_NANO, mode)
+        s = run_stream(tr, JETSON_NANO, mode, chunk=16)
+        assert_stream_equal(r, s, tr.n)
+
+
+def test_stream_mid_trace_nop_run_crossing_chunks():
+    """A 60-NOP run spanning several 16-request chunks: the frozen-slot
+    handoff must reproduce the idle-hop-on-empty-queue semantics."""
+    rng = np.random.RandomState(11)
+    tr = random_trace(rng, 120)
+    tr.kind[20:80] = 4
+    tr.delta[20:80] = 5  # NOPs carry compute time
+    a = run(tr, JETSON_NANO, "ts")
+    s = run_stream(tr, JETSON_NANO, "ts", chunk=16)
+    assert_stream_equal(a, s, tr.n)
+
+
+def test_stream_many_matches_run_many_mixed_modes():
+    rng = np.random.RandomState(5)
+    trs = [random_trace(rng, n) for n in (40, 300, 7)]
+    modes = ["ts", "nots", "reference"]
+    aa = run_many(trs, JETSON_NANO, modes)
+    ss = run_stream_many(trs, JETSON_NANO, modes, chunk=32)
+    for tr, a, s in zip(trs, aa, ss):
+        assert_stream_equal(a, s, tr.n)
+
+
+def test_stream_windowed_iterator_and_factory_inputs():
+    """Feeding pre-sliced windows (odd sizes) or a generator factory is
+    identical to feeding the whole Trace."""
+    rng = np.random.RandomState(9)
+    tr = random_trace(rng, 150)
+    a = run_stream(tr, JETSON_NANO, "ts", chunk=32)
+    b = run_stream(traces.iter_windows(tr, 7), JETSON_NANO, "ts", chunk=32)
+    c = run_stream(lambda: traces.iter_windows(tr, 41), JETSON_NANO, "ts",
+                   chunk=32)
+    assert_stream_equal(a, b, tr.n)
+    assert_stream_equal(a, c, tr.n)
+    np.testing.assert_array_equal(
+        a["t_resp"], run(tr, JETSON_NANO, "ts")["t_resp"][:tr.n])
+
+
+def test_stream_bloom_shared_and_stacked():
+    rng = np.random.RandomState(13)
+    mk = lambda n_keys: BloomFilter.build(  # noqa: E731
+        rng.randint(0, 1 << 19, n_keys).astype(np.uint32),
+        m_bits=1 << 14, k=3)
+    bf, bf2 = mk(100), mk(50)
+    bl = (bf.bits, bf.k, bf.m_bits)
+    bl2 = (bf2.bits, bf2.k, bf2.m_bits)
+    trs = [random_trace(rng, 90), random_trace(rng, 40)]
+    a = run(trs[0], JETSON_NANO, "ts", bloom=bl)
+    s = run_stream(trs[0], JETSON_NANO, "ts", bloom=bl, chunk=16)
+    assert_stream_equal(a, s, trs[0].n)
+    aa = run_many(trs, JETSON_NANO, "ts", blooms=[bl, bl2])
+    ss = run_stream_many(trs, JETSON_NANO, "ts", blooms=[bl, bl2], chunk=16)
+    for tr, x, y in zip(trs, aa, ss):
+        assert_stream_equal(x, y, tr.n)
+
+
+def test_stream_policy_program():
+    rng = np.random.RandomState(17)
+    tr = random_trace(rng, 80)
+    sysp = dataclasses.replace(JETSON_NANO, policy=smcprog.frfcfs_program())
+    a = run(tr, sysp, "ts")
+    s = run_stream(tr, sysp, "ts", chunk=16)
+    assert_stream_equal(a, s, tr.n)
+
+
+def test_stream_aggregate_mode_matches_full():
+    rng = np.random.RandomState(19)
+    tr = random_trace(rng, 200)
+    f = run_stream(tr, JETSON_NANO, "ts", chunk=32)
+    g = run_stream(tr, JETSON_NANO, "ts", chunk=32, collect="aggregate")
+    assert "t_resp" not in g and "t_issue" not in g
+    for k in AGG_KEYS:
+        assert int(f[k]) == int(g[k]), k
+    assert f["avg_load_latency_cycles"] == g["avg_load_latency_cycles"]
+    assert f["n_requests"] == g["n_requests"] == tr.n_real
+
+
+def test_stream_empty_and_all_nop_streams():
+    z = run_stream(iter([]), JETSON_NANO, "ts", chunk=16)
+    assert int(z["served"]) == 0 and z["n_requests"] == 0
+    assert z["avg_load_latency_cycles"] == 0.0
+    nop = Trace.of(kind=np.full(50, 4), bank=np.zeros(50),
+                   row=np.zeros(50), delta=np.ones(50))
+    s = run_stream(nop, JETSON_NANO, "ts", chunk=16)
+    assert int(s["served"]) == 0 and s["n_requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# compile-cache behavior: ONE streaming key, whatever the length
+# ---------------------------------------------------------------------------
+
+def test_stream_single_compile_key_across_lengths():
+    """The LRU regression of ISSUE 7: a long stream holds exactly one
+    streaming compile key, and a DIFFERENT total length adds none —
+    where the padded single-shot path would fork a key per bucket."""
+    rng = np.random.RandomState(23)
+    emulator.cache_clear()
+    run_stream(random_trace(rng, 640), JETSON_NANO, "ts", chunk=32)
+    st = emulator.cache_stats()
+    assert st["misses"] == 1 and st["size"] == 1
+    run_stream(random_trace(rng, 1024), JETSON_NANO, "ts", chunk=32)
+    run_stream(random_trace(rng, 100), JETSON_NANO, "ts", chunk=32)
+    st = emulator.cache_stats()
+    assert st["misses"] == 1, "stream compile key depends on trace length"
+    assert st["size"] == 1
+    assert st["hits"] == 2
+    # a different chunk is a genuinely different program -> new key
+    run_stream(random_trace(rng, 100), JETSON_NANO, "ts", chunk=64)
+    assert emulator.cache_stats()["misses"] == 2
+
+
+def test_stream_compile_key_is_length_free():
+    key = emulator.stream_compile_key(64, 3, JETSON_NANO, "ts")
+    assert key[0] == "stream"
+    assert key == emulator.stream_compile_key(64, 3, JETSON_NANO,
+                                              "reference")
+    assert key != emulator.stream_compile_key(128, 3, JETSON_NANO, "ts")
+    assert key != emulator.stream_compile_key(64, 3, JETSON_NANO, "nots")
+
+
+# ---------------------------------------------------------------------------
+# EmulatorState explicit carry
+# ---------------------------------------------------------------------------
+
+def test_emulator_state_roundtrip():
+    st = EmulatorState.init(32, JETSON_NANO)
+    d = st.to_host()
+    assert isinstance(d, dict) and isinstance(d["bank"], dict)
+    assert d["t_resp"].shape == (32,) and int(d["ptr"]) == 0
+    back = EmulatorState.from_host(d)
+    a = jtu_leaves(st)
+    b = jtu_leaves(back)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def jtu_leaves(tree):
+    import jax
+    return jax.tree_util.tree_leaves(tree)
+
+
+# ---------------------------------------------------------------------------
+# error paths (python -O safe)
+# ---------------------------------------------------------------------------
+
+def test_pad_trace_raises_with_lengths():
+    tr = Trace.of(kind=np.zeros(10), bank=np.zeros(10), row=np.zeros(10),
+                  delta=np.zeros(10))
+    with pytest.raises(ValueError, match="10.*5|5.*10"):
+        emulator.pad_trace(tr, 5)
+
+
+def test_normalize_blooms_raises():
+    bf = BloomFilter.build(np.arange(10, dtype=np.uint32),
+                           m_bits=1 << 10, k=2)
+    bl = (bf.bits, bf.k, bf.m_bits)
+    with pytest.raises(ValueError, match="must match len"):
+        emulator._normalize_blooms([bl, bl, bl], 2)
+    bf2 = BloomFilter.build(np.arange(10, dtype=np.uint32),
+                            m_bits=1 << 11, k=2)
+    with pytest.raises(ValueError, match="must share"):
+        emulator._normalize_blooms([bl, (bf2.bits, bf2.k, bf2.m_bits)], 2)
+
+
+def test_stream_chunk_and_dep_validation():
+    tr = Trace.of(kind=np.zeros(10), bank=np.zeros(10), row=np.zeros(10),
+                  delta=np.zeros(10))
+    with pytest.raises(ValueError, match="halo"):
+        run_stream(tr, JETSON_NANO, "ts", chunk=4)
+    with pytest.raises(ValueError, match="collect"):
+        run_stream(tr, JETSON_NANO, "ts", chunk=16, collect="bogus")
+    deep = Trace.of(kind=np.zeros(10), bank=np.zeros(10), row=np.zeros(10),
+                    delta=np.zeros(10), dep=np.full(10, 20))
+    with pytest.raises(ValueError, match="dep_max"):
+        run_stream(deep, JETSON_NANO, "ts", chunk=16)
+    # ... but a larger dep_max admits it (halo grows to match)
+    a = run(deep, JETSON_NANO, "ts")
+    s = run_stream(deep, JETSON_NANO, "ts", chunk=32, dep_max=20)
+    assert_stream_equal(a, s, deep.n)
+    with pytest.raises(TypeError, match="Trace"):
+        run_stream(iter([np.zeros(4)]), JETSON_NANO, "ts", chunk=16)
+    with pytest.raises(ValueError, match="mode"):
+        run_stream(tr, JETSON_NANO, "bogus", chunk=16)
+
+
+# ---------------------------------------------------------------------------
+# trace files (workload zoo front door)
+# ---------------------------------------------------------------------------
+
+def test_load_trace_file_formats(tmp_path):
+    p = tmp_path / "a.trace"
+    p.write_text("# ramulator style\n"
+                 "0x1A40 R\n"
+                 "256 W\n"
+                 "// comment\n"
+                 "W 0x2000\n"
+                 "4096\n")
+    tr = traces.load_trace_file(str(p), GEO)
+    assert tr.n == 4
+    assert list(tr.kind) == [0, 1, 1, 0]  # READ, WRITE, WRITE, READ
+    bank, row = traces.addr_to_bank_row(
+        np.array([0x1A40, 256, 0x2000, 4096]), GEO)
+    np.testing.assert_array_equal(tr.bank, bank)
+    np.testing.assert_array_equal(tr.row, row)
+
+    q = tmp_path / "b.csv"
+    q.write_text("1000,ReadReq,0x2000\n"
+                 "2000, WriteReq, 8192, 64\n"
+                 "3000,rd,0x100\n")
+    tc = traces.load_trace_file(str(q), GEO)
+    assert tc.n == 3 and list(tc.kind) == [0, 1, 0]
+
+    # delta / window_dep plumb through to the Trace
+    td = traces.load_trace_file(str(q), GEO, delta=3, window_dep=1)
+    assert set(td.delta.tolist()) == {3} and set(td.dep.tolist()) == {1}
+
+
+def test_load_trace_file_bad_line_names_location(tmp_path):
+    p = tmp_path / "bad.trace"
+    p.write_text("0x10 R\nwhat even is this\n")
+    with pytest.raises(ValueError, match=r"bad\.trace:2"):
+        traces.load_trace_file(str(p), GEO)
+    p2 = tmp_path / "bad2.trace"
+    p2.write_text("zzz W\n")
+    with pytest.raises(ValueError, match=r"bad2\.trace:1.*zzz"):
+        traces.load_trace_file(str(p2), GEO)
+
+
+def test_trace_file_windows_equal_whole_and_stream(tmp_path):
+    p = tmp_path / "c.trace"
+    p.write_text("".join(f"{i * 64} {'W' if i % 3 else 'R'}\n"
+                         for i in range(1000)))
+    whole = traces.load_trace_file(str(p), GEO, llc=LLC())
+    parts = list(traces.iter_trace_file_windows(str(p), GEO, window=128,
+                                                llc=LLC()))
+    for f in ("kind", "bank", "row", "delta", "dep"):
+        np.testing.assert_array_equal(
+            getattr(whole, f),
+            np.concatenate([getattr(w, f) for w in parts]))
+    a = run(whole, JETSON_NANO, "ts")
+    s = run_stream(
+        lambda: traces.iter_trace_file_windows(str(p), GEO, window=128,
+                                               llc=LLC()),
+        JETSON_NANO, "ts", chunk=64)
+    assert_stream_equal(a, s, whole.n)
+    # max_requests bounds the CPU-level stream
+    few = traces.load_trace_file(str(p), GEO, max_requests=10)
+    assert few.n == 10
+
+
+def test_synthetic_stream_reproducible():
+    a = list(traces.synthetic_stream(5000, window=777, seed=3))
+    b = list(traces.synthetic_stream(5000, window=777, seed=3))
+    assert sum(w.n for w in a) == 5000
+    assert a[-1].n == 5000 % 777
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.row, y.row)
+        np.testing.assert_array_equal(x.kind, y.kind)
+
+
+# ---------------------------------------------------------------------------
+# campaign stream axis
+# ---------------------------------------------------------------------------
+
+def test_campaign_stream_axis_mixed_with_batched():
+    from repro.core.campaign import Campaign
+    rng = np.random.RandomState(29)
+    tr = random_trace(rng, 200, kinds=2, dep_max=2)
+    c = Campaign()
+    c.add(tr, JETSON_NANO, mode="ts", arm="batch")
+    c.add(lambda: traces.iter_windows(tr, 64), JETSON_NANO, mode="ts",
+          stream=True, chunk=32, arm="stream")
+    c.add(lambda: traces.synthetic_stream(500, window=128, seed=1),
+          JETSON_NANO, mode="nots", stream=True, chunk=32, arm="synth")
+    recs = c.run()
+    assert [r["arm"] for r in recs] == ["batch", "stream", "synth"]
+    for k in AGG_KEYS:
+        assert int(recs[0][k]) == int(recs[1][k]), k
+    assert recs[2]["n_requests"] == 500
+    assert c.n_groups() == 3  # batch + two stream groups (modes differ)
+    # stream_collect="full" returns exact arrays through the campaign too
+    full = c.run(stream_collect="full")
+    np.testing.assert_array_equal(
+        full[1]["t_resp"], run(tr, JETSON_NANO, "ts")["t_resp"][:tr.n])
+
+    with pytest.raises(ValueError, match="stream=True"):
+        c.add([tr], JETSON_NANO)
+    with pytest.raises(ValueError, match="stream"):
+        c.add(tr, JETSON_NANO, chunk=64)
+
+
+def test_campaign_extend_mismatch_raises():
+    from repro.core.campaign import Campaign
+    tr = Trace.of(kind=np.zeros(8), bank=np.zeros(8), row=np.zeros(8),
+                  delta=np.zeros(8))
+    with pytest.raises(ValueError, match="metas"):
+        Campaign().extend([tr, tr], JETSON_NANO, metas=[{}])
