@@ -31,6 +31,12 @@ length-dependent padded scan at this size would be gigabytes). The RSS
 bound is enforced only in ``--section streaming`` runs: peak RSS is
 process-wide, so other sections' allocations own it in a full run and
 the row is informational there.
+PR 8 gates (``--quick``, section ``faults``): ``faults=None`` must
+leave compile/group keys untouched (``faults_off_compile_keys_equal``
+== 1), the cheapest attached fault carry must cost <= 1.05x the
+no-fault-model arm (``faults_off_overhead_x``), and a checkpointed
+campaign re-run must recompute zero finished groups
+(``faults_ckpt_resume_recomputed`` == 0).
 """
 from __future__ import annotations
 
@@ -53,6 +59,10 @@ STREAM_RATIO_GATE = 0.9   # stream vs 8x4000 single-shot steady throughput
 STREAM_KEYS_ROW = "streaming_compile_keys"
 STREAM_RSS_ROW = "streaming_rss_mb"
 STREAM_RSS_BUDGET_MB = 2048  # whole-process peak; O(chunk) driver state
+FAULTS_KEYS_ROW = "faults_off_compile_keys_equal"
+FAULTS_OFF_ROW = "faults_off_overhead_x"
+FAULTS_OFF_GATE = 1.05  # disabled fault carry vs no fault model at all
+FAULTS_CKPT_ROW = "faults_ckpt_resume_recomputed"
 
 
 def _env_header() -> dict:
@@ -107,6 +117,9 @@ def main() -> None:
         "executor_speed": (lambda: paper.bench_executor_speed(6, 2000))
         if args.quick else paper.bench_executor_speed,          # PR 5 executor
         "streaming": paper.bench_streaming,                     # PR 7 driver
+        "faults": (lambda: paper.bench_faults(
+            n_requests=800, study_requests=600)) if args.quick
+        else paper.bench_faults,                                # PR 8 faults
         "lm_traces": paper.bench_lm_traces,                     # framework tie-in
         "kernels": kernels_bench.bench_kernels,
         "roofline": lambda: roofline.csv_rows(roofline.load_records("sp")),
@@ -144,7 +157,8 @@ def main() -> None:
         for r in rows:
             if r[0] in (STEADY_ROW, POLICY_ROW, EXEC_ROW,
                         PCACHE_HITS_ROW, PCACHE_MISSES_ROW,
-                        STREAM_RATIO_ROW, STREAM_KEYS_ROW, STREAM_RSS_ROW):
+                        STREAM_RATIO_ROW, STREAM_KEYS_ROW, STREAM_RSS_ROW,
+                        FAULTS_KEYS_ROW, FAULTS_OFF_ROW, FAULTS_CKPT_ROW):
                 gate_values[r[0]] = float(r[1])
         report["sections"][name] = {
             "rows": [list(r) for r in rows],
@@ -211,6 +225,25 @@ def main() -> None:
                 print(f"_streaming_gate,FAIL,{STREAM_RSS_ROW}={rss}"
                       f">budget={STREAM_RSS_BUDGET_MB}")
         report["stream_rss_budget_mb"] = STREAM_RSS_BUDGET_MB
+    # fault-subsystem gates: (a) faults=None must not perturb compile
+    # keys; (b) the cheapest attached fault carry stays within 5% of no
+    # fault model at all (the off path itself is byte-identical by key
+    # discipline — bench_faults asserts the staged-HLO check); (c) a
+    # checkpointed campaign re-run recomputes zero finished groups
+    if "faults" in sections and not report["sections"]["faults"]["error"]:
+        keys_eq = gate_values.get(FAULTS_KEYS_ROW)
+        if keys_eq != 1:
+            failures += 1
+            print(f"_faults_gate,FAIL,{FAULTS_KEYS_ROW}={keys_eq}")
+        off = gate_values.get(FAULTS_OFF_ROW)
+        if off is None or off > FAULTS_OFF_GATE:
+            failures += 1
+            print(f"_faults_gate,FAIL,{FAULTS_OFF_ROW}={off}"
+                  f">gate={FAULTS_OFF_GATE}")
+        recomputed = gate_values.get(FAULTS_CKPT_ROW)
+        if recomputed is None or recomputed != 0:
+            failures += 1
+            print(f"_faults_gate,FAIL,{FAULTS_CKPT_ROW}={recomputed}")
 
     report["cache_stats"] = emulator.cache_stats()
     report["failures"] = failures

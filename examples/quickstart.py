@@ -97,6 +97,25 @@ def main():
     print(f"\npolicy {prog.name} ({prog.smc_cycles()} smc-cycles/decision): "
           f"{int(r['exec_cycles'])} cycles")
 
+    # deterministic fault injection (PR 8): attach a FaultModel and the
+    # engine reports bit flips — RowHammer disturbance + retention
+    # failures — reproducibly (same seed => same flip set, across every
+    # engine). Mitigations are policy programs: counter-based TRR below
+    # suppresses the flips at a small neighbor-refresh slowdown cost.
+    from repro.core.faults import FaultModel
+    from repro.core.smcprog import mitigation_programs
+    fm = FaultModel(seed=7, hammer_threshold=32, hammer_flip_fp=52000)
+    storm = traces.rowhammer_trace(2000, geo, intensity=0.85, seed=1)
+    plain = run(storm, JETSON_NANO.with_faults(fm), "ts")
+    trr = mitigation_programs(trr_threshold=16)["trr16"]
+    guarded = run(storm, JETSON_NANO.with_policy(trr).with_faults(fm), "ts")
+    print(f"\nrowhammer storm unmitigated: {int(plain['flips'])} flips "
+          f"(BER {float(plain['bit_error_rate']):.4f})")
+    print(f"with TRR policy: {int(guarded['flips'])} flips, "
+          f"{int(guarded['mitigations'])} neighbor refreshes, "
+          f"{int(guarded['exec_cycles']) / int(plain['exec_cycles']):.3f}x "
+          f"cycles")
+
 
 if __name__ == "__main__":
     main()

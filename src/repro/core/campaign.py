@@ -50,7 +50,12 @@ program — share a group.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
+import pickle
 from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.core import emulator, executor
 from repro.core.emulator import Trace
@@ -90,6 +95,46 @@ class Point:
                                   self.bloom)
 
 
+def _group_digest(key: tuple, pts: Sequence[Point]) -> str:
+    """Content address of one compile-key group's RESULTS: the group key
+    (system config, mode, shapes — policy and fault models included via
+    SystemConfig) plus every member trace's actual arrays, modes, and
+    bloom words, in group order. Two campaigns computing the same digest
+    would produce bit-identical ``outs`` for the group — which is what
+    makes checkpoint resume safe: a stale or foreign file can only
+    collide by content, not by position. Meta is deliberately excluded
+    (it is re-applied at merge time from the in-memory points)."""
+    h = hashlib.sha1()
+    h.update(repr(key).encode())
+    for p in pts:
+        h.update(p.mode.encode())
+        for f in ("kind", "bank", "row", "delta", "dep"):
+            h.update(np.ascontiguousarray(
+                np.asarray(getattr(p.trace, f), np.int32)).tobytes())
+        if p.bloom is not None:
+            h.update(np.ascontiguousarray(
+                np.asarray(p.bloom[0])).tobytes())
+            h.update(repr((int(p.bloom[1]), int(p.bloom[2]))).encode())
+    return h.hexdigest()[:16]
+
+
+def _checkpointed(orig_finalize, outs: List[Optional[dict]], path: str):
+    """Wrap a task's ``finalize`` so the group's result list is persisted
+    the moment its last slot lands (atomically: tmp + rename — a kill
+    mid-write leaves no half file, the group just recomputes). A group
+    spanning several tasks saves once, from whichever task finishes
+    last; concurrent finalizers can at worst both write identical bytes
+    and ``os.replace`` keeps either one whole."""
+    def finalize(out, ctx):
+        orig_finalize(out, ctx)
+        if all(o is not None for o in outs):
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "wb") as fh:
+                pickle.dump(outs, fh, protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, path)
+    return finalize
+
+
 class Campaign:
     """Collect grid points, execute them in compile-key groups.
 
@@ -97,10 +142,18 @@ class Campaign:
     arguments to ``add`` (workload name, technique label, size, ...)
     come back verbatim on each record, which is what makes the output
     tidy-data-friendly for the paper-figure benchmarks.
+
+    ``run(checkpoint=dir)`` persists each completed group's results
+    incrementally and resumes a killed sweep with zero recomputation;
+    ``run(on_error='quarantine')`` isolates failing grid points instead
+    of abandoning the sweep. ``last_run`` reports what happened.
     """
 
     def __init__(self) -> None:
         self.points: List[Point] = []
+        # stats of the most recent run(): group counts by outcome plus
+        # the executor's TaskFailure records (empty before any run)
+        self.last_run: Dict[str, Any] = {}
 
     def add(self, trace, sys: SystemConfig, mode: str = "ts",
             bloom: Optional[tuple] = None, stream: bool = False,
@@ -158,7 +211,11 @@ class Campaign:
         return len(self.points)
 
     def run(self, serial: Optional[bool] = None,
-            stream_collect: str = "aggregate") -> List[dict]:
+            stream_collect: str = "aggregate",
+            checkpoint: Optional[str] = None,
+            on_error: str = "raise",
+            timeout: Optional[float] = None,
+            retries: Optional[int] = None) -> List[dict]:
         """Execute every point; one batched call per compile-key group.
 
         The default path prepares EVERY group up front (executable
@@ -179,37 +236,113 @@ class Campaign:
         pool; ``stream_collect`` picks their output shape ('aggregate'
         default — sweeps over unbounded traces should not retain
         per-request arrays; 'full' for exact t_resp/t_issue).
+
+        Fault tolerance:
+
+        * ``checkpoint=<dir>`` (e.g. ``artifacts/campaigns/mysweep``)
+          persists each completed group's raw result list as
+          ``group-<digest>.pkl`` the moment its task finalizes —
+          incrementally, not at sweep end — where the digest is the
+          group's full content address (:func:`_group_digest`). A rerun
+          with the same directory loads finished groups, dispatches
+          NOTHING for them, and produces bit-identical final records (a
+          killed process resumes for free). Stream groups are never
+          checkpointed: their inputs are one-shot iterators with no
+          content address.
+        * ``on_error='quarantine'`` isolates failures: a raising group
+          is recorded (``last_run['failures']``) and its points come
+          back as error records (``{'error', 'error_type', 'group',
+          **meta}``) while every other group completes normally. The
+          default ``'raise'`` raises the executor's aggregate
+          :class:`repro.core.executor.ExecutionError` (after completed
+          groups checkpointed — a poisoned sweep still makes resumable
+          progress).
+        * ``timeout`` / ``retries`` pass through to
+          :func:`repro.core.executor.execute` (per-dispatch wall bound,
+          bounded retry-with-backoff for transient failures).
+
+        ``self.last_run`` gets ``{'groups', 'loaded', 'computed',
+        'failed', 'failures'}`` either way.
         """
+        if on_error not in ("raise", "quarantine"):
+            raise ValueError(
+                f"on_error must be 'raise' or 'quarantine', got {on_error!r}")
         groups: Dict[tuple, List[int]] = {}
         for i, p in enumerate(self.points):
             groups.setdefault(p.group_key(), []).append(i)
+        if checkpoint is not None:
+            os.makedirs(checkpoint, exist_ok=True)
 
         results: List[Optional[dict]] = [None] * len(self.points)
         tasks: List[Any] = []
-        merges = []  # (campaign indices, points, per-group result list)
+        merges = []  # (campaign indices, points, group result list, tasks)
+        loaded = 0
         for key, idxs in groups.items():
             pts = [self.points[i] for i in idxs]
             p0 = pts[0]
+            ckpt_path = None
+            if checkpoint is not None and not p0.stream:
+                ckpt_path = os.path.join(
+                    checkpoint, f"group-{_group_digest(key, pts)}.pkl")
+                if os.path.exists(ckpt_path):
+                    with open(ckpt_path, "rb") as fh:
+                        outs = pickle.load(fh)
+                    if len(outs) == len(pts) and all(
+                            o is not None for o in outs):
+                        loaded += 1
+                        merges.append((idxs, pts, outs, []))
+                        continue  # finished group: zero recompute
             blooms = None
             if p0.bloom is not None:
                 # one shared filter broadcasts; distinct ones stack
                 same = all(b.bloom is p0.bloom for b in pts)
                 blooms = p0.bloom if same else [p.bloom for p in pts]
-            outs: List[Optional[dict]] = [None] * len(pts)
+            outs = [None] * len(pts)
             if p0.stream:
-                tasks += emulator.prepare_stream_tasks(
+                gtasks = emulator.prepare_stream_tasks(
                     [p.trace for p in pts], p0.sys, [p.mode for p in pts],
                     blooms, outs,
                     chunk=p0.chunk or emulator.DEFAULT_STREAM_CHUNK,
                     collect=stream_collect)
             else:
-                tasks += emulator.prepare_tasks(
+                gtasks = emulator.prepare_tasks(
                     [p.trace for p in pts], p0.sys, [p.mode for p in pts],
                     blooms, outs)
-            merges.append((idxs, pts, outs))
-        executor.execute(tasks, serial=serial)
-        for idxs, pts, outs in merges:
+            if ckpt_path is not None:
+                for gt in gtasks:
+                    gt.finalize = _checkpointed(gt.finalize, outs, ckpt_path)
+            tasks += gtasks
+            merges.append((idxs, pts, outs, gtasks))
+
+        failures = executor.execute(
+            tasks, serial=serial, timeout=timeout, retries=retries,
+            raise_on_error=False)
+        fail_by_task = {id(f.task): f for f in failures}
+        failed_groups = sum(
+            1 for m in merges if any(id(t) in fail_by_task for t in m[3]))
+        self.last_run = {
+            "groups": len(groups), "loaded": loaded,
+            "computed": len(groups) - loaded - failed_groups,
+            "failed": failed_groups, "failures": failures,
+        }
+        if failures and on_error == "raise":
+            raise executor.ExecutionError(failures)
+
+        for idxs, pts, outs, gtasks in merges:
+            gfail = next((fail_by_task[id(t)] for t in gtasks
+                          if id(t) in fail_by_task), None)
             for p, i, out in zip(pts, idxs, outs):
+                if out is None:
+                    # quarantined: the group's task raised (or timed
+                    # out) before finalizing this point
+                    e = gfail.error if gfail is not None else None
+                    results[i] = {
+                        "error": str(e) if e is not None else "not computed",
+                        "error_type": type(e).__name__ if e is not None
+                        else "Unknown",
+                        "group": gfail.label if gfail is not None else "",
+                        **p.meta}
+                    continue
                 clash = set(out) & set(p.meta)
                 if clash:  # ValueError, not assert: survives python -O
                     raise ValueError(

@@ -58,6 +58,13 @@ class Geometry:
 READ, WRITE, RC_COPY, RC_INIT, NOP = 0, 1, 2, 3, 4
 
 
+def neighbor_refresh_ticks(t: Timing) -> int:
+    """Cost of one targeted neighbor-row refresh (the RowHammer
+    mitigation primitive): an extra ACT+PRE row cycle on the bank.
+    PARA/TRR policies charge this per fired mitigation."""
+    return t.tRAS + t.tRP
+
+
 def init_bank_state(geo: Geometry):
     return {
         "open_row": jnp.full((geo.n_banks,), -1, jnp.int32),

@@ -119,7 +119,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dram, executor, smcprog
+from repro.core import dram, executor, faults as faultmod, smcprog
 from repro.core.bloom import bloom_probe_jnp
 from repro.core.dram import NOP, WRITE
 from repro.core.timescale import SystemConfig
@@ -144,13 +144,19 @@ def _mul_div(a, num, den):
 
 
 def _policy_env(q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
-                bank_ready, dram_now, last_bank, n_banks: int, Q: int):
+                bank_ready, dram_now, last_bank, n_banks: int, Q: int,
+                fault_hct=None, fault_seed: int = 0):
     """Scheduling environment for the policy VM: one thunk per load op,
     each returning a [Q] int32 vector. :func:`smcprog.evaluate` calls
     only the thunks the program references (and each at most once), so
     an FR-FCFS program pays for exactly the two vectors the hard-coded
     scheduler already computed. Shared by both engine cores so the
-    policy semantics cannot drift between them."""
+    policy semantics cannot drift between them.
+
+    ``fault_hct`` is the fault model's per-bank aggressor ACT counter
+    vector (None on a perfect memory — then ``hammer_ct`` loads zeros
+    and a TRR mitigation policy degrades to a no-op); ``fault_seed``
+    keys the ``para_rand`` draws (see repro.core.faults.para_draw)."""
     is_write = lambda: (kindj[qidx] == WRITE).astype(jnp.int32)  # noqa: E731
     return {
         "age": lambda: q_t,
@@ -164,6 +170,10 @@ def _policy_env(q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
         "qslot": lambda: jnp.arange(Q, dtype=jnp.int32),
         "write_pressure": lambda: jnp.zeros((Q,), jnp.int32) + jnp.sum(
             (visible & (is_write() != 0)).astype(jnp.int32)),
+        "hammer_ct": lambda: (jnp.zeros((Q,), jnp.int32) if fault_hct is None
+                              else fault_hct[q_bank]),
+        "para_rand": lambda: faultmod.para_draw(
+            fault_seed, q_bank, q_row, dram_now),
     }
 
 
@@ -229,6 +239,11 @@ class EmulatorState:
     served_n: jnp.ndarray   # serve-slot counter
     smc_fpga_cycles: jnp.ndarray
     last_bank: jnp.ndarray  # bank of the last served request
+    # fault-injection carry (repro.core.faults.init_fault_state): {} on a
+    # perfect memory, which adds ZERO pytree leaves — the staged carry,
+    # and therefore the compiled program, is byte-identical to a build
+    # that never heard of faults
+    faults: dict = dataclasses.field(default_factory=dict)
 
     @staticmethod
     def init(n: int, sys: SystemConfig) -> "EmulatorState":
@@ -241,7 +256,9 @@ class EmulatorState:
             ptr=jnp.int32(0), mc_release=jnp.int32(0),
             dram_now=jnp.int32(0), hits=jnp.int32(0),
             served_n=jnp.int32(0), smc_fpga_cycles=jnp.int32(0),
-            last_bank=jnp.int32(-1))
+            last_bank=jnp.int32(-1),
+            faults={} if sys.faults is None else faultmod.init_fault_state(
+                sys.faults, sys.geometry.n_banks))
 
     def to_host(self) -> dict:
         """Serializable nested dict of NumPy arrays (device -> host)."""
@@ -255,7 +272,7 @@ class EmulatorState:
 
 _EMU_STATE_FIELDS = ("bank", "t_issue", "t_resp", "queue", "ptr",
                      "mc_release", "dram_now", "hits", "served_n",
-                     "smc_fpga_cycles", "last_bank")
+                     "smc_fpga_cycles", "last_bank", "faults")
 jax.tree_util.register_dataclass(
     EmulatorState, data_fields=list(_EMU_STATE_FIELDS), meta_fields=[])
 
@@ -328,6 +345,7 @@ def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
     W = sys.window
     frfcfs = sys.scheduler == "frfcfs"
     policy = sys.policy
+    fm = sys.faults
     use_bloom = bloom_words is not None
 
     # proc cycles per DRAM tick, fixed-point /FP
@@ -364,13 +382,15 @@ def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
         # ---- scheduling decision (int32-safe two-level argmin) ----
         open_rows = st.bank["open_row"]
         hit_now = open_rows[q_bank] == q_row
+        mit = None
         if policy is not None:
             # software-defined path: the policy VM stages the program's
             # instruction table into branchless O(Q) vector ops here
-            qslot = smcprog.select_slot(policy, _policy_env(
+            qslot, mit = smcprog.select_slot(policy, _policy_env(
                 q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
                 st.bank["ready"], st.dram_now, st.last_bank,
-                geo.n_banks, Q), visible)
+                geo.n_banks, Q, fault_hct=st.faults.get("hct"),
+                fault_seed=0 if fm is None else fm.seed), visible)
         else:
             key_all = jnp.where(visible, q_t, BIG)
             key_hit = jnp.where(visible & hit_now, q_t, BIG)
@@ -415,6 +435,18 @@ def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
             "bus_busy": jnp.where(do, nbs["bus_busy"], bs["bus_busy"]),
             "refs_done": jnp.where(do, nbs["refs_done"], bs["refs_done"]),
         }
+        fstate = st.faults
+        if fm is not None:
+            # fault hook: advance the error model for the served request
+            # and charge any fired neighbor refresh to the bank. Gated
+            # at the Python level — fm=None stages not one extra op.
+            fstate, extra = faultmod.apply_slot(
+                fm, geo.n_rows, t.tREFI, dram.neighbor_refresh_ticks(t),
+                fstate, do=do, hit=hit, bank=b, row=rowj[pick],
+                kind=kindj[pick], t_start=dram_req_t,
+                refreshed=do & (nbs["refs_done"] != bs["refs_done"]),
+                mitigate=mit)
+            bank["ready"] = bank["ready"].at[b].add(extra)
         t_resp = t_resp.at[pick].set(jnp.where(do, resp_t, t_resp[pick]))
         queue = queue.at[qslot].set(jnp.where(do, -1, queue[qslot]))
         # MC busy until the next decision slot; idle hop to the next
@@ -440,7 +472,8 @@ def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
             served_n=st.served_n + jnp.where(do, 1, 0),
             smc_fpga_cycles=st.smc_fpga_cycles + jnp.where(
                 do, sys.smc_cycles_per_decision + sys.smc_transfer_cycles, 0),
-            last_bank=jnp.where(do, bankj[pick], st.last_bank))
+            last_bank=jnp.where(do, bankj[pick], st.last_bank),
+            faults=fstate)
 
     return step
 
@@ -467,7 +500,7 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
     served_mask = state.t_resp < BIG
     last_resp = jnp.max(jnp.where(valid & served_mask, state.t_resp, 0))
     last_issue = jnp.max(jnp.where(valid, t_issue, 0))
-    return {
+    out = {
         "exec_cycles": jnp.maximum(last_resp, last_issue),
         "row_hits": state.hits,
         "served": state.served_n,
@@ -476,6 +509,9 @@ def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         "t_resp": state.t_resp,
         "t_issue": t_issue,
     }
+    if sys.faults is not None:
+        out.update(faultmod.fault_result_fields(state.faults))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -525,6 +561,7 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
     W = sys.window
     frfcfs = sys.scheduler == "frfcfs"
     policy = sys.policy
+    fm = sys.faults
     use_bloom = bloom_words is not None
 
     scale_num = jnp.int32(round((sys.proc_per_tick_fpga if mode == "nots"
@@ -548,6 +585,8 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         "smc_fpga_cycles": jnp.int32(0),
         "last_bank": jnp.int32(-1),
     }
+    if fm is not None:
+        state["faults"] = faultmod.init_fault_state(fm, geo.n_banks)
 
     kindj, bankj, rowj, deltaj, depj = kind, bank, row, delta, dep
 
@@ -569,11 +608,14 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
 
         open_rows = state["bank"]["open_row"]
         hit_now = open_rows[q_bank] == q_row
+        mit = None
         if policy is not None:
-            qslot = smcprog.select_slot(policy, _policy_env(
+            qslot, mit = smcprog.select_slot(policy, _policy_env(
                 q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
                 state["bank"]["ready"], state["dram_now"],
-                state["last_bank"], geo.n_banks, Q), visible)
+                state["last_bank"], geo.n_banks, Q,
+                fault_hct=state.get("faults", {}).get("hct"),
+                fault_seed=0 if fm is None else fm.seed), visible)
         else:
             key_all = jnp.where(visible, q_t, BIG)
             key_hit = jnp.where(visible & hit_now, q_t, BIG)
@@ -599,8 +641,21 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         resp_t = jnp.maximum(resp_t, decision_t + mc_issue)
 
         state = dict(state)
+        old_refs = state["bank"]["refs_done"]
         state["bank"] = jax.tree_util.tree_map(
             lambda a, b: jnp.where(do, b, a), state["bank"], nbs)
+        if fm is not None:
+            # fault hook mirrored from _make_slot_body (shared apply_slot
+            # — the semantics live in repro.core.faults, not here)
+            bsel = bankj[pick]
+            fstate, extra = faultmod.apply_slot(
+                fm, geo.n_rows, t.tREFI, dram.neighbor_refresh_ticks(t),
+                state["faults"], do=do, hit=hit, bank=bsel,
+                row=rowj[pick], kind=kindj[pick], t_start=dram_req_t,
+                refreshed=do & (nbs["refs_done"] != old_refs),
+                mitigate=mit)
+            state["faults"] = fstate
+            state["bank"]["ready"] = state["bank"]["ready"].at[bsel].add(extra)
         state["t_resp"] = jnp.where(do, t_resp.at[pick].set(resp_t), t_resp)
         queue = jnp.where(do, queue.at[qslot].set(-1), queue)
         state["dram_now"] = jnp.where(do, jnp.maximum(state["dram_now"], dram_req_t),
@@ -629,7 +684,7 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
     served_mask = state["t_resp"] < BIG
     last_resp = jnp.max(jnp.where(valid & served_mask, state["t_resp"], 0))
     last_issue = jnp.max(jnp.where(valid, t_issue, 0))
-    return {
+    out = {
         "exec_cycles": jnp.maximum(last_resp, last_issue),
         "row_hits": state["hits"],
         "served": state["served_n"],
@@ -638,6 +693,9 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         "t_resp": state["t_resp"],
         "t_issue": t_issue,
     }
+    if fm is not None:
+        out.update(faultmod.fault_result_fields(state["faults"]))
+    return out
 
 
 def pad_trace(tr: Trace, n: int) -> Trace:
@@ -977,6 +1035,8 @@ def _finalize(out_row: dict, padded: Trace, sys: SystemConfig,
     lat = out["t_resp"] - out["t_issue"]
     ok = (padded.kind != NOP) & (out["t_resp"] < int(BIG))
     out["avg_load_latency_cycles"] = float(lat[ok].mean()) if ok.any() else 0.0
+    if "flips" in out:  # fault model attached: flips per served request
+        out["bit_error_rate"] = float(out["flips"]) / max(int(out["served"]), 1)
     return out
 
 
@@ -1093,6 +1153,21 @@ def prepare_tasks(traces: Sequence[Trace], sys: SystemConfig,
     return tasks
 
 
+def _execute_entry_point(tasks, serial) -> None:
+    """Execute for the library entry points (run_many/run_stream_many):
+    a single failed task re-raises its ORIGINAL exception — validation
+    errors like a dep_max violation keep their type and message — and
+    only a genuine multi-failure raises the executor's aggregate
+    :class:`repro.core.executor.ExecutionError`. Campaign.run() goes
+    through :func:`repro.core.executor.execute` directly and always
+    sees the full failure records."""
+    fails = executor.execute(tasks, serial=serial, raise_on_error=False)
+    if fails:
+        if len(fails) == 1:
+            raise fails[0].error
+        raise executor.ExecutionError(fails)
+
+
 def _run_grouped(traces: Sequence[Trace], sys: SystemConfig,
                  mode: Union[str, Sequence[str]], blooms,
                  ref: bool, serial: Optional[bool] = None) -> List[dict]:
@@ -1105,7 +1180,7 @@ def _run_grouped(traces: Sequence[Trace], sys: SystemConfig,
     traces = list(traces)
     results: List[Optional[dict]] = [None] * len(traces)
     tasks = prepare_tasks(traces, sys, mode, blooms, results, ref=ref)
-    executor.execute(tasks, serial=serial)
+    _execute_entry_point(tasks, serial)
     return results
 
 
@@ -1660,10 +1735,20 @@ def prepare_stream_tasks(streams: Sequence, sys: SystemConfig,
             served = np.asarray(e.served_n)
             dram_now = np.asarray(e.dram_now)
             smc = np.asarray(e.smc_fpga_cycles)
+            # the fault carry rides EmulatorState through every window
+            # untouched by the shift, so the final window's state IS the
+            # whole stream's flip record (bit-identical to single-shot)
+            fhost = (None if sys.faults is None else
+                     jax.tree_util.tree_map(np.asarray, e.faults))
             for j, i in enumerate(idxs):
                 results[i] = ctx["accs"][j].result(
                     ctx["chunkers"][j].n, int(hits[j]), int(served[j]),
                     int(dram_now[j]), int(smc[j]), sys, modes[i])
+                if fhost is not None:
+                    frow = {kk: v[j] for kk, v in fhost.items()}
+                    results[i].update(faultmod.fault_result_fields(frow))
+                    results[i]["bit_error_rate"] = \
+                        int(frow["vptr"]) / max(int(served[j]), 1)
 
         tasks.append(executor.StreamTask(
             fn=fn, pack=pack, windows=windows, consume=consume,
@@ -1708,7 +1793,7 @@ def run_stream_many(streams: Sequence, sys: SystemConfig,
     tasks = prepare_stream_tasks(streams, sys, mode, blooms, results,
                                  chunk=chunk, dep_max=dep_max,
                                  collect=collect)
-    executor.execute(tasks, serial=serial)
+    _execute_entry_point(tasks, serial)
     return results
 
 

@@ -36,12 +36,15 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
+import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["GroupTask", "StreamTask", "execute", "set_workers", "workers"]
+__all__ = ["GroupTask", "StreamTask", "TaskFailure", "ExecutionError",
+           "execute", "set_workers", "workers"]
 
 
 @dataclasses.dataclass
@@ -61,6 +64,11 @@ class GroupTask:
     finalize: Callable[[dict, Any], None]
     label: str = ""
     cost: int = 0   # relative work hint (e.g. slots * batch) for LPT order
+
+    # pack() re-pads and re-stacks from the immutable prepared traces and
+    # finalize() overwrites the same disjoint slots, so a failed attempt
+    # can safely be retried from scratch (transient-failure recovery)
+    retryable = True
 
     def run(self) -> None:
         args, ctx = self.pack()                      # host: pad + stack
@@ -100,6 +108,10 @@ class StreamTask:
     finalize: Callable[[Any, Any], None]
     label: str = ""
     cost: int = 0
+
+    # a failed window loop cannot be replayed: the stream iterators and
+    # chunker buffers are partially consumed — never auto-retry
+    retryable = False
 
     _PREFETCH = 2  # max staged windows in flight (bounds memory)
 
@@ -141,8 +153,27 @@ class StreamTask:
                 state, out = self.fn(state, *args)   # device: one window
                 self.consume(tuple(np.asarray(o) for o in out), ctx)
         finally:
-            stop.set()                  # unblocks a feeder mid-put
-            th.join(timeout=5.0)
+            # deterministic shutdown: signal stop, then DRAIN the queue
+            # while joining — a feeder sitting in q.put() frees its slot
+            # immediately instead of burning its 0.1s put-timeout per
+            # queued window, and the loop converges however many windows
+            # are in flight. The deadline only guards a feeder stuck
+            # inside the user's window generator (next() cannot be
+            # interrupted from outside); that pathological case is
+            # reported, not silently leaked.
+            stop.set()
+            deadline = time.monotonic() + 5.0
+            while th.is_alive() and time.monotonic() < deadline:
+                try:
+                    q.get_nowait()
+                except _queue.Empty:
+                    pass
+                th.join(timeout=0.02)
+            if th.is_alive():  # pragma: no cover - needs a hung generator
+                warnings.warn(
+                    f"stream prefetch thread for {self.label or 'task'!r} "
+                    f"did not stop within 5s (window generator blocked); "
+                    f"leaking a daemon thread", RuntimeWarning)
         self.finalize(state, ctx)
 
 
@@ -201,30 +232,136 @@ def _pool() -> ThreadPoolExecutor:
         return _POOL
 
 
-def execute(tasks: Sequence[Any], serial: Optional[bool] = None) -> None:
+@dataclasses.dataclass
+class TaskFailure:
+    """One task that did not complete: the task object, its label, the
+    exception from its final attempt, and how many attempts ran (0 for
+    a dispatch timeout — the attempt never settled)."""
+    task: Any
+    label: str
+    error: BaseException
+    attempts: int
+
+
+class ExecutionError(RuntimeError):
+    """Aggregate of every failed task in one :func:`execute` call. The
+    message names EVERY failed group label (a sweep debugging session
+    should not need N reruns to see N failures) and carries the first
+    underlying error's text; ``failures`` holds the full records."""
+
+    def __init__(self, failures: Sequence[TaskFailure]):
+        self.failures = list(failures)
+        labels = ", ".join(
+            (f.label or f"task{i}") for i, f in enumerate(self.failures))
+        first = self.failures[0].error
+        super().__init__(
+            f"{len(self.failures)} task(s) failed [{labels}]; first: "
+            f"{type(first).__name__}: {first}")
+
+
+def _attempt(task: Any, retries: int, backoff: float
+             ) -> Optional[TaskFailure]:
+    """Run one task to completion with bounded retry-with-backoff.
+    Only ``task.retryable`` tasks are re-attempted (GroupTask packing is
+    idempotent; a StreamTask's iterators are consumed). Returns None on
+    success, else the failure record — never raises."""
+    attempts = 0
+    while True:
+        attempts += 1
+        try:
+            task.run()
+            return None
+        except BaseException as e:
+            if not getattr(task, "retryable", False) or attempts > retries:
+                return TaskFailure(task, getattr(task, "label", ""),
+                                   e, attempts)
+            time.sleep(backoff * (2 ** (attempts - 1)))
+
+
+def execute(tasks: Sequence[Any], serial: Optional[bool] = None,
+            timeout: Optional[float] = None, retries: Optional[int] = None,
+            backoff: Optional[float] = None,
+            raise_on_error: bool = True) -> List[TaskFailure]:
     """Run every task; overlapped across the worker pool unless
     ``serial`` (or a single task / single worker) forces the in-order
     loop. Tasks were prepared in submission order on the caller's
     thread, so compile-cache counters are already settled; execution
-    order does not affect results (disjoint result slots). The first
-    worker exception propagates after all tasks settle."""
+    order does not affect results (disjoint result slots).
+
+    Failure isolation: a raising task never stops its siblings — every
+    task settles, failures are collected into :class:`TaskFailure`
+    records, and (``raise_on_error``, the default) one
+    :class:`ExecutionError` naming every failed label is raised at the
+    end; ``raise_on_error=False`` returns the records instead (what
+    ``Campaign.run(on_error='quarantine')`` uses).
+
+    Transient-failure recovery: ``retries`` (default
+    ``REPRO_EXEC_RETRIES``, 0) re-attempts each *retryable* task with
+    exponential backoff starting at ``backoff`` seconds (default
+    ``REPRO_EXEC_BACKOFF_S``, 0.05). ``timeout`` (default
+    ``REPRO_EXEC_TIMEOUT_S``, none) bounds each task's wall time in
+    overlapped mode: a task past its deadline is recorded as a
+    ``TimeoutError`` failure and ABANDONED — Python threads cannot be
+    killed, so its worker keeps running detached (it may still write
+    its disjoint result slots later); treat timed-out sweeps' result
+    lists as tainted and re-dispatch. In serial mode there is no second
+    thread to watch the clock, so ``timeout`` is not enforced."""
     tasks = list(tasks)
+    if retries is None:
+        retries = max(0, _env_int("REPRO_EXEC_RETRIES", 0))
+    if backoff is None:
+        backoff = float(os.environ.get("REPRO_EXEC_BACKOFF_S", "") or 0.05)
+    if timeout is None:
+        env_t = os.environ.get("REPRO_EXEC_TIMEOUT_S")
+        timeout = float(env_t) if env_t else None
     if serial is None:
         serial = len(tasks) <= 1 or _WORKERS <= 1
+
+    failures: List[TaskFailure] = []
     if serial:
         for t in tasks:
-            t.run()
-        return
-    # longest-processing-time-first: dispatching expensive groups first
-    # minimizes the tail where one worker finishes a big group alone
-    # (order is free to change — results land in disjoint slots)
-    tasks.sort(key=lambda t: t.cost, reverse=True)
-    futures = [_pool().submit(t.run) for t in tasks]
-    err: List[BaseException] = []
-    for f in futures:
-        try:
-            f.result()
-        except BaseException as e:  # settle all before raising
-            err.append(e)
-    if err:
-        raise err[0]
+            fail = _attempt(t, retries, backoff)
+            if fail is not None:
+                failures.append(fail)
+    else:
+        # longest-processing-time-first: dispatching expensive groups
+        # first minimizes the tail where one worker finishes a big group
+        # alone (order is free to change — results land in disjoint slots)
+        tasks.sort(key=lambda t: t.cost, reverse=True)
+        starts: dict = {}
+
+        def tracked(t):
+            starts[id(t)] = time.monotonic()
+            return _attempt(t, retries, backoff)
+
+        pending = {_pool().submit(tracked, t): t for t in tasks}
+        if timeout is None:
+            for f in pending:           # block; _attempt never raises
+                fail = f.result()
+                if fail is not None:
+                    failures.append(fail)
+        else:
+            while pending:              # poll so deadlines fire on time
+                for f in list(pending):
+                    t = pending[f]
+                    started = starts.get(id(t))
+                    if f.done():
+                        del pending[f]
+                        fail = f.result()
+                        if fail is not None:
+                            failures.append(fail)
+                    elif started is not None \
+                            and time.monotonic() - started > timeout:
+                        del pending[f]  # abandon; see docstring
+                        failures.append(TaskFailure(
+                            t, getattr(t, "label", ""),
+                            TimeoutError(
+                                f"task {getattr(t, 'label', '')!r} "
+                                f"exceeded the {timeout}s dispatch "
+                                f"timeout"), 0))
+                if pending:
+                    time.sleep(0.005)
+
+    if failures and raise_on_error:
+        raise ExecutionError(failures)
+    return failures

@@ -1,0 +1,248 @@
+"""Deterministic DRAM fault injection: retention weak cells + RowHammer.
+
+EasyDRAM's ecosystem (SoftMC, DRAM Bender — see PAPERS.md) exists to
+characterize real-chip *misbehavior*: retention failures and RowHammer
+disturbance flips. This module gives the emulation core the same
+vocabulary. A :class:`FaultModel` describes an error process with plain
+integers only, so it is hashable and rides the emulator compile key
+through ``SystemConfig.faults`` exactly like a policy program — fault
+configs group correctly in :class:`repro.core.campaign.Campaign`, and
+``faults=None`` leaves compile keys (and the compiled programs — the
+fault carry is an empty pytree then) byte-identical to a fault-free
+build.
+
+Two error processes, both evaluated per served request inside the scan
+slot body at O(1) + O(n_banks) cost (point gathers/scatters and one
+bank-width vector op — never O(rows) state, preserving the engine's
+O(Q)+O(1) per-slot invariant):
+
+* **RowHammer** — each row ACT increments its bank's aggressor
+  activation counter; an all-bank REF (the existing tREFI catch-up in
+  ``dram.service_request``) resets every counter, and a policy-driven
+  neighbor refresh (see ``mitigate`` below) resets the served bank's.
+  When a bank's counter crosses ``hammer_threshold`` on an ACT, the
+  activated row is the aggressor and its two physical neighbors
+  (row ± 1) each receive an independent Bernoulli(``hammer_flip_fp`` /
+  65536) bit-flip draw, after which the counter resets (the aggressor
+  pattern must be rebuilt). Per-bank counters are a deliberate
+  simplification of per-row ones: the O(rows) table a real TRR keeps is
+  exactly the state the slot invariant forbids, and for the
+  single-aggressor storms the study sweeps the bank counter IS the
+  aggressor count.
+* **Retention** — a stateless weak-cell map: each (bank, row) is weak
+  with probability ``weak_fp`` / 65536 (decided by a content-keyed hash,
+  not a stored table), and a READ of a weak row flips when the time
+  since the row's last all-bank REF window start exceeds
+  ``retention_ticks`` (``t % tREFI >= retention_ticks`` — the existing
+  refresh model already quantizes REFs to tREFI boundaries).
+
+Determinism is the contract: every random draw is a pure function of
+``(seed, bank, row, absolute DRAM time)`` via ``jax.random.fold_in``
+chains — no carried RNG state — so the flip set is bit-identical across
+``run`` == ``run_many`` == ``run_ref`` == ``run_stream`` == sharded
+execution (frozen streaming slots have ``do=False`` and draw nothing;
+window shifts never touch the fault carry, which holds no request
+indices). Pinned in tests/test_faults.py.
+
+Flip *events* are recorded in a bounded victim log (``victim_slots``
+entries of (bank, row, tick)); total flip counts keep counting past the
+log's capacity. Fault state lives in ``EmulatorState.faults`` (a plain
+dict pytree) and the same :func:`apply_slot` is called by both engine
+cores, so the semantics cannot drift between them.
+
+Mitigations are *policies*: ``smcprog`` programs gain a ``mitigate``
+output (see :func:`repro.core.smcprog.PolicyBuilder.build`) plus two
+environment loads — ``hammer_count()`` (the served bank's aggressor
+counter) and ``para_rand()`` (a per-slot uniform draw) — which express
+counter-based TRR and PARA-style probabilistic neighbor refresh in the
+policy IR. When the mitigate flag fires on a served request the engine
+charges a neighbor-refresh row cycle to the bank
+(``dram.neighbor_refresh_ticks``) and resets its aggressor counter:
+the bit-error-rate vs. slowdown tradeoff falls out end-to-end
+(``techniques.RowHammerMitigationStudy``).
+
+No module-level jnp constants: like ``smcprog``, this module is
+imported by the jax-free config layer (timescale.py) and must not
+initialize the JAX backend at import time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# fold_in stream tags: disjoint randomness domains under one user seed
+_DOMAIN_HAMMER = 1
+_DOMAIN_WEAK = 2
+_DOMAIN_PARA = 3
+
+_FP_ONE = 65536  # probability fixed-point denominator (16-bit)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """One deterministic DRAM error process, all-integer and hashable
+    (rides the emulator compile key through ``SystemConfig.faults``).
+
+    Probabilities are 16-bit fixed point: ``x / 65536`` (65536 = always,
+    0 = never). ``hammer_threshold == 0`` disables the RowHammer model;
+    ``weak_fp == 0`` disables the retention model — disabled models
+    stage zero extra randomness ops."""
+    seed: int = 0
+    # RowHammer: per-bank ACT counter threshold and per-victim flip prob
+    hammer_threshold: int = 0
+    hammer_flip_fp: int = _FP_ONE
+    # retention: weak-cell fraction and decay time after a REF boundary
+    weak_fp: int = 0
+    retention_ticks: int = 0
+    # bounded victim-event log capacity (counts keep going past it)
+    victim_slots: int = 32
+
+    def validate(self) -> "FaultModel":
+        if self.hammer_threshold < 0:
+            raise ValueError(
+                f"hammer_threshold must be >= 0, got {self.hammer_threshold}")
+        for nm in ("hammer_flip_fp", "weak_fp"):
+            v = getattr(self, nm)
+            if not 0 <= v <= _FP_ONE:
+                raise ValueError(
+                    f"{nm} is 16-bit fixed point in [0, {_FP_ONE}], got {v}")
+        if self.retention_ticks < 0:
+            raise ValueError(
+                f"retention_ticks must be >= 0, got {self.retention_ticks}")
+        if self.victim_slots < 1:
+            raise ValueError(
+                f"victim_slots must be >= 1, got {self.victim_slots}")
+        return self
+
+
+def init_fault_state(fm: FaultModel, n_banks: int) -> dict:
+    """Fresh fault carry for one trace: the per-bank aggressor counters,
+    the bounded victim log (-1 = empty), and the flip/mitigation
+    counters. ``vptr`` is the total flip count (it keeps incrementing
+    past ``victim_slots``; log writes just stop)."""
+    V = int(fm.victim_slots)
+    return {
+        "hct": jnp.zeros((n_banks,), jnp.int32),
+        "vbank": jnp.full((V,), -1, jnp.int32),
+        "vrow": jnp.full((V,), -1, jnp.int32),
+        "vt": jnp.full((V,), -1, jnp.int32),
+        "vptr": jnp.int32(0),
+        "ham_flips": jnp.int32(0),
+        "ret_flips": jnp.int32(0),
+        "mitigations": jnp.int32(0),
+    }
+
+
+def _u16(key) -> jnp.ndarray:
+    """Uniform 16-bit draw from one derived key (compare against a
+    ``*_fp`` threshold: ``_u16(k) < fp`` fires with prob fp/65536)."""
+    return (jax.random.bits(key, (), jnp.uint32) >> 16).astype(jnp.int32)
+
+
+def para_draw(seed: int, q_bank, q_row, now) -> jnp.ndarray:
+    """[Q] per-slot uniform 16-bit draws for the ``para_rand`` policy
+    load: a pure content hash of (seed, bank, row, decision-time DRAM
+    frontier), so PARA mitigation decisions are bit-identical across
+    engines, batching, streaming, and sharding."""
+    kp = jax.random.fold_in(jax.random.PRNGKey(seed), _DOMAIN_PARA)
+    kt = jax.random.fold_in(kp, now)
+
+    def one(b, r):
+        return _u16(jax.random.fold_in(jax.random.fold_in(kt, b), r))
+
+    return jax.vmap(one)(q_bank, q_row)
+
+
+def apply_slot(fm: FaultModel, n_rows: int, tREFI: int, mit_ticks: int,
+               fstate: dict, *, do, hit, bank, row, kind, t_start,
+               refreshed, mitigate):
+    """Advance the fault carry for one scheduling slot. Shared verbatim
+    by the fast core (:func:`repro.core.emulator._make_slot_body`), the
+    reference core (``_run_core_ref``) and — through the shared slot
+    body — the streaming windows, which is what makes the flip sets
+    engine-invariant by construction.
+
+    ``do``/``hit`` are the slot's serve/row-hit predicates, ``bank`` /
+    ``row`` / ``kind`` the served request, ``t_start`` its absolute
+    DRAM-tick service time, ``refreshed`` whether this service caught up
+    on all-bank REF debt, and ``mitigate`` the policy's neighbor-refresh
+    flag for the served request (None = the policy has no mitigate
+    output). Returns ``(new_fstate, extra_bank_ticks)`` where the extra
+    ticks are the mitigation's row-cycle cost on the served bank (0 when
+    no mitigation fired). Everything is a predicated point gather /
+    scatter plus one n_banks-wide reset — O(1)+O(n_banks) per slot, no
+    O(rows) state."""
+    from repro.core.dram import READ
+
+    kh = jax.random.fold_in(jax.random.PRNGKey(fm.seed), _DOMAIN_HAMMER)
+    kw = jax.random.fold_in(jax.random.PRNGKey(fm.seed), _DOMAIN_WEAK)
+    mit = jnp.zeros((), bool) if mitigate is None else (mitigate & do)
+
+    # all-bank REF wipes accumulated disturbance in every bank (the REF
+    # catch-up in dram.service_request runs BEFORE the access, so reset
+    # precedes this slot's own ACT increment)
+    hct = jnp.where(refreshed, 0, fstate["hct"])
+    events = []  # (flip predicate, victim row, is_hammer)
+    if fm.hammer_threshold > 0:
+        act = do & ~hit                      # row activate happened
+        cur = hct[bank] + act.astype(jnp.int32)
+        crossed = act & (cur >= fm.hammer_threshold)
+        kt = jax.random.fold_in(
+            jax.random.fold_in(kh, bank), t_start)
+        for off in (-1, 1):                  # the two physical neighbors
+            vr = row + off
+            valid = (vr >= 0) & (vr < n_rows)
+            u = _u16(jax.random.fold_in(kt, vr))
+            events.append((crossed & valid & (u < fm.hammer_flip_fp),
+                           vr, True))
+        # crossing consumed the disturbance; a fired mitigation refreshed
+        # the bank's victims and resets it too
+        hct = hct.at[bank].set(
+            jnp.where(do, jnp.where(crossed | mit, 0, cur), hct[bank]))
+    if fm.weak_fp > 0:
+        kc = jax.random.fold_in(jax.random.fold_in(kw, bank), row)
+        weak = _u16(kc) < fm.weak_fp        # stateless weak-cell map
+        decayed = (t_start % tREFI) >= fm.retention_ticks
+        events.append((do & (kind == READ) & weak & decayed, row, False))
+
+    vbank, vrow = fstate["vbank"], fstate["vrow"]
+    vt, vptr = fstate["vt"], fstate["vptr"]
+    ham = jnp.int32(0)
+    ret = jnp.int32(0)
+    V = int(fm.victim_slots)
+    for pred, r, is_ham in events:
+        i = jnp.clip(vptr, 0, V - 1)
+        can = pred & (vptr < V)              # log is bounded; counts aren't
+        vbank = vbank.at[i].set(jnp.where(can, bank, vbank[i]))
+        vrow = vrow.at[i].set(jnp.where(can, r, vrow[i]))
+        vt = vt.at[i].set(jnp.where(can, t_start, vt[i]))
+        vptr = vptr + pred.astype(jnp.int32)
+        if is_ham:
+            ham = ham + pred.astype(jnp.int32)
+        else:
+            ret = ret + pred.astype(jnp.int32)
+
+    new = {
+        "hct": hct, "vbank": vbank, "vrow": vrow, "vt": vt, "vptr": vptr,
+        "ham_flips": fstate["ham_flips"] + ham,
+        "ret_flips": fstate["ret_flips"] + ret,
+        "mitigations": fstate["mitigations"] + mit.astype(jnp.int32),
+    }
+    return new, jnp.where(mit, jnp.int32(mit_ticks), jnp.int32(0))
+
+
+def fault_result_fields(fstate: dict) -> dict:
+    """Per-trace result entries derived from a final fault carry — one
+    source of truth for the single-shot cores and the streaming
+    finalizer (tests compare these across all engines)."""
+    return {
+        "flips": fstate["vptr"],
+        "ham_flips": fstate["ham_flips"],
+        "ret_flips": fstate["ret_flips"],
+        "mitigations": fstate["mitigations"],
+        "victim_bank": fstate["vbank"],
+        "victim_row": fstate["vrow"],
+        "victim_t": fstate["vt"],
+    }

@@ -105,6 +105,8 @@ OP_BANK_BUSY = 7       # 1 where the request's bank is busy at the DRAM frontier
 OP_RR_DIST = 8         # cyclic bank distance from the last served bank
 OP_QSLOT = 9           # hardware-queue slot index 0..Q-1
 OP_WRITE_PRESSURE = 10  # count of visible writes, broadcast to all slots
+OP_HAMMER_CT = 11      # request bank's aggressor ACT counter (faults model)
+OP_PARA_RAND = 12      # per-slot uniform 16-bit draw in [0, 65536) (PARA)
 # ALU
 OP_ADD = 16
 OP_SUB = 17
@@ -124,6 +126,7 @@ _LOAD_NAMES = {
     OP_BANK: "bank", OP_ROW: "row", OP_IS_WRITE: "is_write",
     OP_BANK_BUSY: "bank_busy", OP_RR_DIST: "rr_dist", OP_QSLOT: "qslot",
     OP_WRITE_PRESSURE: "write_pressure",
+    OP_HAMMER_CT: "hammer_ct", OP_PARA_RAND: "para_rand",
 }
 _OP_NAMES = {v: k for k, v in globals().items() if k.startswith("OP_")}
 _UNARY = {OP_NOT}
@@ -154,6 +157,12 @@ class PolicyProgram:
     table: Tuple[Tuple[int, int, int, int], ...]
     score_reg: int
     boost_reg: int = -1
+    # optional mitigation output: nonzero on the SERVED slot triggers a
+    # targeted neighbor refresh on its bank (RowHammer defense) — the
+    # engine charges dram.neighbor_refresh_ticks and resets the bank's
+    # aggressor counter. -1 = the policy never mitigates (all pre-fault
+    # programs), which keeps select_slot's trace byte-identical.
+    mitigate_reg: int = -1
     # cost-model fields never enter the emulation semantics (with_policy
     # copies the cost onto SystemConfig.smc_cycles_per_decision, which
     # IS compared), so like `name` they are excluded from eq/hash —
@@ -177,9 +186,13 @@ class PolicyProgram:
 
     @property
     def digest(self) -> str:
-        """Content digest (table + outputs); what the compile key sees."""
-        raw = repr((self.table, self.score_reg, self.boost_reg))
-        return hashlib.sha1(raw.encode()).hexdigest()[:12]
+        """Content digest (table + outputs); what the compile key sees.
+        mitigate_reg joins the repr only when set, so every pre-fault
+        program keeps its historical digest."""
+        sem = (self.table, self.score_reg, self.boost_reg)
+        if self.mitigate_reg >= 0:
+            sem = sem + (self.mitigate_reg,)
+        return hashlib.sha1(repr(sem).encode()).hexdigest()[:12]
 
     def uses(self, opcode: int) -> bool:
         return any(row[0] == opcode for row in self.table)
@@ -190,6 +203,8 @@ class PolicyProgram:
             raise ValueError(f"score_reg {self.score_reg} out of range")
         if not -1 <= self.boost_reg < n:
             raise ValueError(f"boost_reg {self.boost_reg} out of range")
+        if not -1 <= self.mitigate_reg < n:
+            raise ValueError(f"mitigate_reg {self.mitigate_reg} out of range")
         for i, (op, a, b, imm) in enumerate(self.table):
             if op != OP_CONST and op not in _LOAD_NAMES \
                     and op not in _UNARY and op not in _BINARY \
@@ -228,6 +243,8 @@ class PolicyProgram:
                 out.append("score")
             if i == self.boost_reg:
                 out.append("boost")
+            if i == self.mitigate_reg:
+                out.append("mitigate")
             tag = ("   -> " + "+".join(out)) if out else ""
             arg = f" {arg}" if arg else ""
             lines.append(f"  v{i} = {nm}{arg}{tag}")
@@ -291,6 +308,18 @@ class PolicyBuilder:
         """Number of visible writes, broadcast to every slot."""
         return self._emit(OP_WRITE_PRESSURE)
 
+    def hammer_count(self) -> Reg:
+        """The request bank's aggressor ACT counter (see
+        repro.core.faults). All-zero when no FaultModel is attached, so
+        counter-based TRR degrades to a no-op on a perfect memory."""
+        return self._emit(OP_HAMMER_CT)
+
+    def para_rand(self) -> Reg:
+        """Per-slot uniform draw in [0, 65536), deterministically keyed
+        on (fault seed, bank, row, decision time) — compare against a
+        16-bit fixed-point constant for a PARA coin flip."""
+        return self._emit(OP_PARA_RAND)
+
     def prefer_writes_drain(self, threshold: int = 2) -> Reg:
         """Write-drain mask: 1 on write requests while at least
         ``threshold`` writes are visible (batch writes to amortize bus
@@ -343,16 +372,20 @@ class PolicyBuilder:
                           imm=self._r(b))
 
     def build(self, score: Reg, boost: Optional[Reg] = None,
+              mitigate: Optional[Reg] = None,
               name: str = "policy", base_cycles: int = 300,
               cycles_per_op: int = 25,
               smc_cycles: Optional[int] = None) -> PolicyProgram:
         """Assemble. ``score`` is minimized among visible requests;
         ``boost`` (optional 0/1 mask) marks a preferred class served
-        first whenever any member is visible. ``smc_cycles`` pins the
-        decision cost instead of deriving it from program length."""
+        first whenever any member is visible; ``mitigate`` (optional 0/1
+        mask) triggers a neighbor refresh when the served slot has it
+        set. ``smc_cycles`` pins the decision cost instead of deriving
+        it from program length."""
         return PolicyProgram(
             table=tuple(self._rows), score_reg=self._r(score),
             boost_reg=-1 if boost is None else self._r(boost),
+            mitigate_reg=-1 if mitigate is None else self._r(mitigate),
             base_cycles=base_cycles, cycles_per_op=cycles_per_op,
             smc_cycles_override=smc_cycles, name=name).validate()
 
@@ -366,8 +399,9 @@ class PolicyBuilder:
 
 def evaluate(prog: PolicyProgram, env: Dict):
     """Run ``prog`` over the scheduling environment. Returns
-    ``(score, boost)`` — two [Q] int32 vectors (boost is all-zero when
-    the program declared no boost register)."""
+    ``(score, boost, mitigate)`` — [Q] int32 vectors (boost is all-zero
+    when the program declared no boost register; mitigate is None when
+    no mitigate register, so legacy programs stage zero extra ops)."""
     cache: Dict[str, object] = {}
 
     def load(nm):
@@ -411,7 +445,8 @@ def evaluate(prog: PolicyProgram, env: Dict):
     score = vals[prog.score_reg]
     boost = (vals[prog.boost_reg] if prog.boost_reg >= 0
              else jnp.zeros_like(score))
-    return score, boost
+    mit = vals[prog.mitigate_reg] if prog.mitigate_reg >= 0 else None
+    return score, boost, mit
 
 
 def select_slot(prog: PolicyProgram, env: Dict, visible):
@@ -421,15 +456,20 @@ def select_slot(prog: PolicyProgram, env: Dict, visible):
     which is what makes :func:`frfcfs_program` / :func:`fcfs_program`
     bit-identical to the ``sys.scheduler`` string path. Scores are
     clamped to ``BIG - 1`` so a user program can never out-score the
-    invisible-slot sentinel and redirect the argmin to a garbage slot."""
-    score, boost = evaluate(prog, env)
+    invisible-slot sentinel and redirect the argmin to a garbage slot.
+
+    Returns ``(qslot, mitigate)``: the selected slot, and the selected
+    slot's mitigate flag (scalar bool) or None for legacy programs —
+    None keeps the staged trace byte-identical to pre-fault builds."""
+    score, boost, mit = evaluate(prog, env)
     score = jnp.minimum(score, BIG - 1)
     key_all = jnp.where(visible, score, BIG)
     boost_on = visible & (boost != 0)
     key_boost = jnp.where(boost_on, score, BIG)
     slot_boost = jnp.argmin(key_boost).astype(jnp.int32)
     slot_all = jnp.argmin(key_all).astype(jnp.int32)
-    return jnp.where(jnp.any(boost_on), slot_boost, slot_all)
+    qslot = jnp.where(jnp.any(boost_on), slot_boost, slot_all)
+    return qslot, (None if mit is None else mit[qslot] != 0)
 
 
 # ---------------------------------------------------------------------------
@@ -493,4 +533,49 @@ def builtin_programs() -> Dict[str, PolicyProgram]:
     progs = [frfcfs_program(), fcfs_program(), bank_round_robin_program(),
              open_page_program(), closed_page_program(),
              write_drain_program()]
+    return {p.name: p for p in progs}
+
+
+# ---------------------------------------------------------------------------
+# RowHammer mitigation policies: FR-FCFS scheduling plus a mitigate
+# output. Kept OUT of builtin_programs() — the default policy-sweep
+# grid (and its tests) is mitigation-free; sweeps come in through
+# techniques.RowHammerMitigationStudy / mitigation_programs().
+# ---------------------------------------------------------------------------
+
+
+def para_program(p_fp: int = 655) -> PolicyProgram:
+    """PARA: on every row activation (a served row *miss*), refresh the
+    neighbors with probability ``p_fp``/65536 (default ~1%). Stateless —
+    no counters — which is PARA's selling point; the cost is paying the
+    refresh tax on well-behaved traffic too."""
+    if not 0 <= p_fp <= 65536:
+        raise ValueError(f"p_fp is 16-bit fixed point, got {p_fp}")
+    b = PolicyBuilder()
+    hit = b.score_row_hit()
+    coin = b.lt(b.para_rand(), b.const(p_fp))
+    return b.build(score=b.score_age(), boost=hit,
+                   mitigate=b.and_(coin, b.not_(hit)),
+                   name=f"para{p_fp}")
+
+
+def trr_program(trr_threshold: int = 512) -> PolicyProgram:
+    """Counter-based TRR: refresh the neighbors when the request bank's
+    aggressor ACT counter reaches ``trr_threshold``. Deterministic and
+    cheap when traffic is benign; choose the threshold below the chip's
+    hammer threshold or the mitigation fires too late."""
+    if trr_threshold < 1:
+        raise ValueError(f"trr_threshold must be >= 1, got {trr_threshold}")
+    b = PolicyBuilder()
+    return b.build(score=b.score_age(), boost=b.score_row_hit(),
+                   mitigate=b.ge(b.hammer_count(), b.const(trr_threshold)),
+                   name=f"trr{trr_threshold}")
+
+
+def mitigation_programs(para_fp: int = 655,
+                        trr_threshold: int = 512) -> Dict[str, PolicyProgram]:
+    """The RowHammer-mitigation sweep arms, keyed by name: unmitigated
+    FR-FCFS baseline + PARA + counter-based TRR."""
+    progs = [frfcfs_program(), para_program(para_fp),
+             trr_program(trr_threshold)]
     return {p.name: p for p in progs}

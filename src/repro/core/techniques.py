@@ -7,7 +7,10 @@ coherence) with profiling-driven fallback; ``TRCDReduction`` runs the
 two-stage characterize -> Bloom-filter flow and hands the filter to the
 engine, which consults it on every row activation;
 ``SchedulingPolicyStudy`` sweeps software-defined scheduler programs
-(``repro.core.smcprog``) across workloads with length-derived SMC costs.
+(``repro.core.smcprog``) across workloads with length-derived SMC costs;
+``RowHammerMitigationStudy`` sweeps mitigation programs x hammer
+intensities under the fault-injection model (``repro.core.faults``),
+trading bit-error rate against emulated slowdown.
 
 Evaluation goes through the batched campaign path
 (``emulator.run_many`` / ``campaign.Campaign``): ``evaluate_batch`` /
@@ -26,6 +29,7 @@ from repro.core import smcprog, traces
 from repro.core.campaign import Campaign
 from repro.core.bloom import BloomFilter
 from repro.core.dram import Geometry
+from repro.core.faults import FaultModel
 from repro.core.profiling import DeviceModel
 from repro.core.smcprog import PolicyProgram
 from repro.core.timescale import SystemConfig
@@ -160,6 +164,87 @@ class SchedulingPolicyStudy:
                     "smc_cycles": cost[p.name],
                     "speedup_vs_baseline":
                         (base / max(e, 1)) if base is not None else 1.0,
+                }
+            out.append(d)
+        return out
+
+
+class RowHammerMitigationStudy:
+    """RowHammer mitigations as software-memory-controller programs,
+    judged end-to-end under the fault-injection model (PR 8): each
+    (mitigation program x hammer intensity) point replays a
+    :func:`traces.rowhammer_trace` aggressor storm under one
+    :class:`~repro.core.faults.FaultModel`, and the record pairs the
+    resulting bit-error rate with the mitigation's emulated slowdown —
+    the reliability-vs-performance tradeoff curve the paper's
+    methodology exists to measure quickly.
+
+    Programs default to :func:`smcprog.mitigation_programs`:
+    ``frfcfs`` (no mitigation — the BER ceiling and the slowdown
+    baseline), ``para`` (probabilistic neighbor refresh on row-miss
+    activations) and ``trr`` (activation-counter-triggered refresh).
+    ``derive_cost=True`` additionally charges each program's SMC
+    decision cost by its length, so the slowdown axis includes the
+    software controller overhead, not just the injected neighbor
+    refreshes."""
+
+    def __init__(self, sys: SystemConfig,
+                 fault_model: Optional[FaultModel] = None,
+                 programs: Optional[Dict[str, PolicyProgram]] = None,
+                 baseline: str = "frfcfs"):
+        self.sys = sys
+        self.geo = sys.geometry
+        self.fault_model = fault_model if fault_model is not None else \
+            FaultModel(seed=7, hammer_threshold=48, hammer_flip_fp=52000)
+        # default arms are tuned TO the fault model: TRR must trigger
+        # below the hammer threshold or it never fires, and PARA at ~5%
+        # per activation meaningfully resets a threshold-48 counter
+        self.programs = dict(programs) if programs is not None \
+            else smcprog.mitigation_programs(
+                para_fp=3277,
+                trr_threshold=max(1, self.fault_model.hammer_threshold // 2))
+        if baseline not in self.programs:
+            raise ValueError(
+                f"baseline {baseline!r} not among programs "
+                f"{sorted(self.programs)}")
+        self.baseline = baseline
+
+    def evaluate(self, intensities: Sequence[float] = (0.45, 0.9),
+                 n_requests: int = 480, mode: str = "ts", seed: int = 0,
+                 derive_cost: bool = True, **run_kw) -> List[dict]:
+        """One record per intensity, in order: ``{'intensity': f,
+        <program>: {bit_error_rate, flips, mitigations, exec_cycles,
+        exec_seconds, slowdown_vs_unmitigated}}``. All points run as one
+        batched campaign — one compile per program (intensities share
+        each program's compile-key group). ``run_kw`` passes through to
+        :meth:`Campaign.run` (``checkpoint=...`` resumes a killed
+        sweep)."""
+        import dataclasses as _dc
+        c = Campaign()
+        for i, inten in enumerate(intensities):
+            tr = traces.rowhammer_trace(n_requests, self.geo,
+                                        intensity=float(inten),
+                                        seed=seed + i)
+            for name, prog in self.programs.items():
+                sysc = self.sys.with_policy(prog) if derive_cost \
+                    else _dc.replace(self.sys, policy=prog)
+                c.add(tr, sysc.with_faults(self.fault_model), mode,
+                      mitigation=name, i=i)
+        recs = {(r["i"], r["mitigation"]): r for r in c.run(**run_kw)}
+        out: List[dict] = []
+        for i, inten in enumerate(intensities):
+            base = int(recs[(i, self.baseline)]["exec_cycles"])
+            d: dict = {"intensity": float(inten)}
+            for name in self.programs:
+                r = recs[(i, name)]
+                d[name] = {
+                    "bit_error_rate": float(r["bit_error_rate"]),
+                    "flips": int(r["flips"]),
+                    "mitigations": int(r["mitigations"]),
+                    "exec_cycles": int(r["exec_cycles"]),
+                    "exec_seconds": float(r["exec_seconds"]),
+                    "slowdown_vs_unmitigated":
+                        int(r["exec_cycles"]) / max(base, 1),
                 }
             out.append(d)
         return out

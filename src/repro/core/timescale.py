@@ -27,6 +27,7 @@ import dataclasses
 from typing import Optional
 
 from repro.core.dram import TCK_NS, Geometry, Timing
+from repro.core.faults import FaultModel
 from repro.core.smcprog import PolicyProgram
 
 
@@ -55,6 +56,12 @@ class SystemConfig:
     # decision cost from program length, or dataclasses.replace() to
     # keep this config's cost (what the bit-identity tests do).
     policy: Optional[PolicyProgram] = None
+    # deterministic DRAM error injection: a repro.core.faults.FaultModel
+    # (all-int, hashable) evaluated inside the scan slot body. None means
+    # a perfect memory AND a byte-identical compiled program (the fault
+    # carry is an empty pytree then). Like `policy`, it folds into the
+    # emulator compile key / Campaign grouping through this config.
+    faults: Optional[FaultModel] = None
 
     # ---- derived conversion helpers (proc cycles per DRAM tick etc.) ----
     @property
@@ -86,6 +93,11 @@ class SystemConfig:
         slowness that time scaling hides and ``nots`` exposes)."""
         return dataclasses.replace(self, policy=prog,
                                    smc_cycles_per_decision=prog.smc_cycles())
+
+    def with_faults(self, fm: Optional[FaultModel]) -> "SystemConfig":
+        """Attach (or clear, with None) a deterministic fault model."""
+        return dataclasses.replace(
+            self, faults=fm.validate() if fm is not None else None)
 
     def dram_ticks_to_proc(self, ticks, mode: str):
         if mode == "nots":

@@ -21,6 +21,7 @@ throughput measurements.
 from __future__ import annotations
 
 import dataclasses
+import gzip
 from typing import Iterator, Optional
 
 import numpy as np
@@ -126,9 +127,12 @@ def parse_trace_line(line: str, path: str = "<trace>",
 
 def iter_trace_requests(path: str,
                         max_requests: Optional[int] = None) -> Iterator[tuple]:
-    """Lazily yield ``(addr, is_write)`` from a text trace file."""
+    """Lazily yield ``(addr, is_write)`` from a text trace file.
+    ``.gz`` files decompress transparently (production traces ship
+    compressed); parse errors still carry the real file:lineno."""
     seen = 0
-    with open(path) as fh:
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as fh:
         for lineno, line in enumerate(fh, 1):
             if max_requests is not None and seen >= max_requests:
                 return
@@ -142,7 +146,8 @@ def iter_trace_requests(path: str,
 def load_trace_file(path: str, geo: Geometry, delta: int = 8,
                     window_dep: int = 0, llc: Optional[LLC] = None,
                     max_requests: Optional[int] = None) -> Trace:
-    """Parse a whole ramulator-/MemTraceProbe-style text trace into one
+    """Parse a whole ramulator-/MemTraceProbe-style text trace (plain
+    or gzip ``.gz``) into one
     :class:`Trace` via :func:`dram_trace_from_stream`. ``llc`` (an
     optional cache model) filters the CPU-level stream down to DRAM
     traffic first. For files too large to materialize, use
@@ -227,6 +232,39 @@ def synthetic_stream(n_requests: int, window: int = 4096, seed: int = 0,
                        dep=rng.randint(0, dep_max, m))
         emitted += m
         k += 1
+
+
+def rowhammer_trace(n_requests: int, geo: Geometry, hammer_row: int = 128,
+                    hammer_bank: int = 0, intensity: float = 0.8,
+                    double_sided: bool = True, seed: int = 0,
+                    delta_max: int = 8) -> Trace:
+    """Aggressor-access storm for the fault-injection model
+    (``core.faults.FaultModel``): a fraction ``intensity`` of the
+    requests are row-conflicting ACT hammers on ``hammer_row`` (and
+    ``hammer_row + 2`` when ``double_sided`` — both neighbor the victim
+    ``hammer_row + 1``), the rest are uniform background traffic on the
+    OTHER banks, so every background access leaves the aggressor bank's
+    open-row state alone and each hammer pair forces a fresh
+    activation. Deterministic in ``seed``; ``intensity`` is the sweep
+    axis of ``techniques.RowHammerMitigationStudy``."""
+    if not 0.0 <= intensity <= 1.0:
+        raise ValueError(f"intensity must be in [0, 1], got {intensity}")
+    rng = np.random.RandomState(seed)
+    hammer = rng.rand(n_requests) < intensity
+    # alternate between the two aggressors so consecutive hammers are
+    # always row misses (single-sided alternates with a far decoy row)
+    alt = np.cumsum(hammer) % 2
+    other = hammer_row + 2 if double_sided \
+        else (hammer_row + geo.n_rows // 2) % geo.n_rows
+    row = np.where(hammer, np.where(alt == 0, hammer_row, other),
+                   rng.randint(0, geo.n_rows, n_requests))
+    bg_bank = (hammer_bank + rng.randint(1, max(2, geo.n_banks),
+                                         n_requests)) % geo.n_banks
+    bank = np.where(hammer, hammer_bank, bg_bank)
+    kind = np.where(hammer, READ, rng.randint(0, 2, n_requests))
+    return Trace.of(kind=kind.astype(np.int32), bank=bank, row=row,
+                    delta=rng.randint(1, delta_max, n_requests),
+                    dep=np.zeros(n_requests, np.int32))
 
 
 # ---------------- microbenchmarks ----------------

@@ -1,11 +1,17 @@
 """The overlapped campaign executor (PR 5): bit-identity of overlapped /
 sharded execution vs the serial PR 4 group loop, add-order preservation,
 the LRU bound on the in-memory executable cache, the persistent on-disk
-compile cache across processes, and the ValueError API guards."""
+compile cache across processes, and the ValueError API guards. PR 8
+adds the fault-tolerance layer: per-task failure isolation with
+aggregate errors, bounded retry + dispatch timeouts, the stream-prefetch
+shutdown contract, and campaign checkpoint/resume (including a
+kill-mid-campaign subprocess resume)."""
 import json
 import os
 import subprocess
 import sys
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -107,6 +113,292 @@ class TestOverlapBitIdentity:
                 executor.set_workers(0)
         finally:
             executor.set_workers(old)
+
+
+class FakeTask:
+    """Executor-contract probe: controllable failures, no XLA compiles."""
+    retryable = True
+
+    def __init__(self, label, fails=0, sleep=0.0):
+        self.label, self.cost = label, 1
+        self.fails, self.sleep, self.runs = fails, sleep, 0
+
+    def run(self):
+        self.runs += 1
+        time.sleep(self.sleep)
+        if self.runs <= self.fails:
+            raise RuntimeError(f"boom {self.label} run{self.runs}")
+
+
+class TestFailureIsolation:
+    def test_all_failures_aggregated_with_every_label(self):
+        """One bad task must not hide another: the aggregate error names
+        every failed label and carries per-task records."""
+        with pytest.raises(executor.ExecutionError) as ei:
+            executor.execute([FakeTask("a", fails=9), FakeTask("ok"),
+                              FakeTask("b", fails=9)], serial=True)
+        assert "2 task(s) failed" in str(ei.value)
+        assert "a" in str(ei.value) and "b" in str(ei.value)
+        assert {f.label for f in ei.value.failures} == {"a", "b"}
+        assert all(isinstance(f.error, RuntimeError)
+                   for f in ei.value.failures)
+
+    def test_siblings_complete_despite_failure(self):
+        ok, bad = FakeTask("ok"), FakeTask("bad", fails=9)
+        fails = executor.execute([bad, ok], serial=True,
+                                 raise_on_error=False)
+        assert ok.runs == 1
+        assert [f.label for f in fails] == ["bad"]
+
+    def test_retry_with_backoff_recovers_transient_failure(self):
+        flaky = FakeTask("flaky", fails=2)
+        out = executor.execute([flaky], serial=True, retries=3,
+                               backoff=0.001)
+        assert out == [] and flaky.runs == 3
+        # exhausted retries still fail, reporting the attempt count
+        dead = FakeTask("dead", fails=99)
+        fails = executor.execute([dead], serial=True, retries=2,
+                                 backoff=0.001, raise_on_error=False)
+        assert fails[0].attempts == 3 and dead.runs == 3
+
+    def test_non_retryable_tasks_never_retry(self):
+        t = FakeTask("stream-ish", fails=1)
+        t.retryable = False
+        fails = executor.execute([t], serial=True, retries=5,
+                                 backoff=0.001, raise_on_error=False)
+        assert t.runs == 1 and fails[0].attempts == 1
+
+    def test_dispatch_timeout_abandons_stuck_task(self):
+        """Needs >= 2 workers: with one, the sibling queues behind the
+        abandoned thread (timeouts only bound DISPATCHED work)."""
+        slow, quick = FakeTask("slow", sleep=1.5), FakeTask("quick")
+        old = executor.set_workers(max(2, executor.workers()))
+        try:
+            t0 = time.monotonic()
+            fails = executor.execute([slow, quick], serial=False,
+                                     timeout=0.3, raise_on_error=False)
+            dt = time.monotonic() - t0
+        finally:
+            executor.set_workers(old)  # joins the abandoned sleeper
+        assert dt < 1.0  # returned without waiting the sleep out
+        assert [f.label for f in fails] == ["slow"]
+        assert isinstance(fails[0].error, TimeoutError)
+        assert quick.runs == 1
+
+
+class TestStreamPrefetchShutdown:
+    """The prefetch thread must stop deterministically on ANY exit from
+    StreamTask.run() — normal completion, a window raising in fn, or the
+    feeder itself failing — never leak waiting on a full queue."""
+
+    @staticmethod
+    def _prefetch_threads():
+        return [t for t in threading.enumerate()
+                if t.name.startswith("repro-stream-prefetch")]
+
+    @staticmethod
+    def _task(n_windows=64, fn=None):
+        def windows(ctx):
+            for i in range(n_windows):
+                yield (np.full(4, i),)
+        return executor.StreamTask(
+            fn=fn or (lambda state, a: (state + 1, (a,))),
+            pack=lambda: (0, None), windows=windows,
+            consume=lambda out, ctx: None,
+            finalize=lambda state, ctx: None, label="probe")
+
+    def _assert_no_leak(self):
+        deadline = time.monotonic() + 5.0
+        while self._prefetch_threads() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert self._prefetch_threads() == []
+
+    def test_normal_completion_leaves_no_thread(self):
+        self._task().run()
+        self._assert_no_leak()
+
+    def test_consumer_error_stops_feeder_promptly(self):
+        """fn raising on an early window: the feeder is still trying to
+        queue dozens more. Shutdown must drain it out of q.put() fast."""
+        def fn(state, a):
+            if state == 2:
+                raise RuntimeError("window exploded")
+            return state + 1, (a,)
+
+        t0 = time.monotonic()
+        with pytest.raises(RuntimeError, match="window exploded"):
+            self._task(n_windows=500, fn=fn).run()
+        assert time.monotonic() - t0 < 5.0
+        self._assert_no_leak()
+
+    def test_feeder_error_surfaces_on_consumer(self):
+        def windows(ctx):
+            yield (np.zeros(1),)
+            raise ValueError("generator died")
+
+        t = self._task()
+        t.windows = windows
+        with pytest.raises(ValueError, match="generator died"):
+            t.run()
+        self._assert_no_leak()
+
+
+def _identical_records(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        x, y = a[k], b[k]
+        if isinstance(x, np.ndarray) or isinstance(y, np.ndarray):
+            np.testing.assert_array_equal(x, y)
+        else:
+            assert x == y, k
+
+
+class TestCampaignFaultTolerance:
+    def _campaign(self):
+        rng = np.random.RandomState(23)
+        tr1, tr2 = mk_trace(rng, 44), mk_trace(rng, 46)
+        c = Campaign()
+        c.add(tr1, JETSON_NANO, workload="a")
+        c.add(tr2, JETSON_NANO, workload="b")       # same group as a
+        c.add(tr1, JETSON_NANO, mode="nots", workload="a-nots")
+        return c
+
+    def test_checkpoint_resume_recomputes_nothing(self, tmp_path):
+        ck = str(tmp_path / "ckpt")
+        c = self._campaign()
+        r1 = c.run(checkpoint=ck)
+        assert c.last_run["loaded"] == 0 and c.last_run["computed"] == 2
+        assert len(os.listdir(ck)) == 2
+        c2 = self._campaign()
+        r2 = c2.run(checkpoint=ck)
+        assert c2.last_run["loaded"] == 2 and c2.last_run["computed"] == 0
+        for a, b in zip(r1, r2):
+            _identical_records(a, b)
+        # and checkpointing itself never changes results
+        r3 = self._campaign().run()
+        for a, b in zip(r1, r3):
+            _identical_records(a, b)
+
+    def test_checkpoint_is_content_addressed(self, tmp_path):
+        """A different trace in the group must MISS the old file."""
+        ck = str(tmp_path / "ckpt")
+        c = self._campaign()
+        c.run(checkpoint=ck)
+        c2 = self._campaign()
+        c2.points[0].trace = mk_trace(np.random.RandomState(99), 44)
+        c2.run(checkpoint=ck)
+        assert c2.last_run["loaded"] == 1       # only the untouched group
+        assert c2.last_run["computed"] == 1
+
+    def test_quarantine_completes_other_groups(self, monkeypatch):
+        c = self._campaign()
+        baseline = self._campaign().run()
+        orig = emulator.prepare_tasks
+
+        def poisoned(trs, sysc, modes, blooms, outs):
+            tasks = orig(trs, sysc, modes, blooms, outs)
+            if modes[0] == "nots":
+                for t in tasks:
+                    def die():
+                        raise RuntimeError("pack died")
+                    t.pack = die
+            return tasks
+
+        monkeypatch.setattr(emulator, "prepare_tasks", poisoned)
+        recs = c.run(on_error="quarantine")
+        assert c.last_run["failed"] == 1 and c.last_run["computed"] == 1
+        errs = [r for r in recs if "error" in r]
+        assert len(errs) == 1 and errs[0]["workload"] == "a-nots"
+        assert errs[0]["error_type"] == "RuntimeError"
+        assert "pack died" in errs[0]["error"]
+        good = [r for r in recs if "error" not in r]
+        for a, b in zip([r for r in baseline
+                         if r["workload"] != "a-nots"], good):
+            _identical_records(a, b)
+        # default on_error='raise' still raises the aggregate
+        with pytest.raises(executor.ExecutionError, match="pack died"):
+            self._campaign().run()
+
+    def test_run_validates_on_error(self):
+        with pytest.raises(ValueError, match="on_error"):
+            Campaign().run(on_error="ignore")
+
+    def test_killed_campaign_resumes_bit_identically(self, tmp_path):
+        """The end-to-end resume contract: a process killed mid-campaign
+        (first group checkpointed, second never ran) restarts, recomputes
+        ZERO finished groups and produces the full result set, matching
+        this process bit-for-bit."""
+        child = tmp_path / "child.py"
+        ck = tmp_path / "ckpt"
+        cache = tmp_path / "xla_cache"
+        child.write_text(
+            "import json, os, sys\n"
+            "from repro.utils.jax_compat import "
+            "enable_persistent_compile_cache\n"
+            "enable_persistent_compile_cache(sys.argv[1])\n"
+            "import numpy as np\n"
+            "from repro.core import emulator\n"
+            "from repro.core.campaign import Campaign\n"
+            "from repro.core.emulator import Trace\n"
+            "from repro.core.timescale import JETSON_NANO\n"
+            "rng = np.random.RandomState(29)\n"
+            "def mk(n):\n"
+            "    return Trace.of(kind=rng.randint(0, 2, n),\n"
+            "                    bank=rng.randint(0, 16, n),\n"
+            "                    row=rng.randint(0, 4096, n),\n"
+            "                    delta=rng.randint(1, 8, n),\n"
+            "                    dep=rng.randint(0, 2, n))\n"
+            "c = Campaign()\n"
+            "c.add(mk(40), JETSON_NANO, workload='w0')\n"
+            "c.add(mk(40), JETSON_NANO, mode='nots', workload='w1')\n"
+            "if os.environ.get('DIE_MID_CAMPAIGN'):\n"
+            "    orig = emulator.prepare_tasks\n"
+            "    def sabotage(trs, sysc, modes, blooms, outs):\n"
+            "        ts = orig(trs, sysc, modes, blooms, outs)\n"
+            "        if modes[0] == 'nots':\n"
+            "            for t in ts:\n"
+            "                t.pack = lambda: os._exit(9)\n"
+            "        return ts\n"
+            "    emulator.prepare_tasks = sabotage\n"
+            "recs = c.run(serial=True, checkpoint=sys.argv[2])\n"
+            "print(json.dumps({\n"
+            "  'loaded': c.last_run['loaded'],\n"
+            "  'computed': c.last_run['computed'],\n"
+            "  'exec': [int(r['exec_cycles']) for r in recs],\n"
+            "  'resp': [int(np.asarray(r['t_resp']).astype(np.int64).sum())\n"
+            "           for r in recs]}))\n")
+        src = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "src"))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+
+        env_kill = dict(env, DIE_MID_CAMPAIGN="1")
+        p1 = subprocess.run(
+            [sys.executable, str(child), str(cache), str(ck)], env=env_kill,
+            capture_output=True, text=True, timeout=420)
+        assert p1.returncode == 9, (p1.returncode, p1.stderr[-2000:])
+        files = os.listdir(ck)
+        assert len(files) == 1      # group w0 persisted before the kill
+
+        p2 = subprocess.run(
+            [sys.executable, str(child), str(cache), str(ck)], env=env,
+            capture_output=True, text=True, timeout=420)
+        assert p2.returncode == 0, p2.stderr[-2000:]
+        out = json.loads(p2.stdout.strip().splitlines()[-1])
+        assert out["loaded"] == 1 and out["computed"] == 1
+        assert len(os.listdir(ck)) == 2
+
+        # bit-identity against this process, fresh compute, no checkpoint
+        rng = np.random.RandomState(29)
+        c = Campaign()
+        c.add(mk_trace(rng, 40), JETSON_NANO, workload="w0")
+        c.add(mk_trace(rng, 40), JETSON_NANO, mode="nots", workload="w1")
+        here = c.run(serial=True)
+        assert out["exec"] == [int(r["exec_cycles"]) for r in here]
+        assert out["resp"] == [
+            int(np.asarray(r["t_resp"]).astype(np.int64).sum())
+            for r in here]
 
 
 class TestSharding:

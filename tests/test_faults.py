@@ -1,0 +1,197 @@
+"""Deterministic fault injection (PR 8): the flip set must be a pure
+function of (FaultModel.seed, trace content, system config) — bit-identical
+across the fast scan core, the reference core, batched ``run_many``,
+the streaming window driver, serial vs overlapped campaign execution and
+the forced-shard path — and ``faults=None`` must leave compile keys and
+results exactly as they were before the fault subsystem existed.
+
+Compile budget note: every distinct (SystemConfig, batch-bucket) pair
+costs a fresh XLA compile of the whole scan (~tens of seconds on the
+no-fast-scan test runtime), so this module reuses ONE fault config and
+ONE trace everywhere and leans on the Python-level reference engine
+(no compile) for seed-sensitivity checks.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import emulator, smcprog, traces
+from repro.core.campaign import Campaign
+from repro.core.emulator import run, run_many, run_ref, run_stream
+from repro.core.faults import FaultModel
+from repro.core.timescale import JETSON_NANO
+
+GEO = JETSON_NANO.geometry
+
+FM = FaultModel(seed=3, hammer_threshold=8, hammer_flip_fp=30000,
+                weak_fp=16000, retention_ticks=30, victim_slots=16)
+SYS = JETSON_NANO.with_faults(FM)
+
+FAULT_SCALARS = ("flips", "ham_flips", "ret_flips", "mitigations")
+FAULT_LOGS = ("victim_bank", "victim_row", "victim_t")
+
+
+def hammer_trace(n=96, seed=5):
+    return traces.rowhammer_trace(n, GEO, intensity=0.75, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def fault_runs():
+    """Every engine over the SAME (trace, fault model) — computed once
+    for the whole module (three compiles: single, batch-of-2, stream)."""
+    tr = hammer_trace()
+    return {
+        "tr": tr,
+        "fast": run(tr, SYS, "ts"),
+        "ref": run_ref(tr, SYS, "ts"),
+        "many": run_many([tr, tr], SYS, "ts"),
+        "stream": run_stream(tr, SYS, "ts", chunk=32),
+    }
+
+
+def assert_fault_fields_equal(a, b):
+    for k in FAULT_SCALARS:
+        assert int(a[k]) == int(b[k]), k
+    for k in FAULT_LOGS:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert float(a["bit_error_rate"]) == float(b["bit_error_rate"])
+
+
+class TestEngineInvariance:
+    def test_flips_actually_happen(self, fault_runs):
+        """The shared config must exercise BOTH error processes, or the
+        equality assertions below would pass vacuously."""
+        r = fault_runs["fast"]
+        assert int(r["ham_flips"]) > 0
+        assert int(r["ret_flips"]) > 0
+        assert int(r["flips"]) == int(r["ham_flips"]) + int(r["ret_flips"])
+        assert 0 < float(r["bit_error_rate"]) <= 1.0
+        # the bounded log holds real events: valid banks/rows, -1 padding
+        vb = np.asarray(r["victim_bank"])
+        filled = vb >= 0
+        assert filled.sum() == min(int(r["flips"]), FM.victim_slots)
+        assert (np.asarray(r["victim_row"])[filled] >= 0).all()
+
+    def test_fast_matches_reference(self, fault_runs):
+        assert_fault_fields_equal(fault_runs["fast"], fault_runs["ref"])
+
+    def test_run_many_matches_and_batch_rows_identical(self, fault_runs):
+        a, b = fault_runs["many"]
+        assert_fault_fields_equal(a, fault_runs["fast"])
+        assert_fault_fields_equal(a, b)  # same trace twice -> same flips
+
+    def test_stream_matches_single_shot(self, fault_runs):
+        """The fault carry rides the window shift untouched: the final
+        window's state IS the whole stream's record."""
+        assert_fault_fields_equal(fault_runs["stream"], fault_runs["fast"])
+        assert int(fault_runs["stream"]["exec_cycles"]) == \
+            int(fault_runs["fast"]["exec_cycles"])
+
+    def test_campaign_serial_overlapped_sharded_identical(self, fault_runs):
+        """The property the resumable-campaign layer depends on: however
+        the grid executes, fault results are bit-identical."""
+        tr = fault_runs["tr"]
+
+        def build():
+            c = Campaign()
+            c.add(tr, SYS, arm=0)
+            c.add(tr, SYS, arm=1)  # same group: batch bucket of 2
+            return c
+
+        a = build().run(serial=True)
+        b = build().run(serial=False)
+        old = emulator.set_sharding("force")
+        try:
+            c = build().run()
+        finally:
+            emulator.set_sharding(old)
+        for recs in (b, c):
+            for x, y in zip(a, recs):
+                assert_fault_fields_equal(x, y)
+                assert int(x["exec_cycles"]) == int(y["exec_cycles"])
+
+    def test_seed_sensitivity_via_reference_engine(self, fault_runs):
+        """Different seed => different flip set; same seed (fresh run)
+        => identical. Uses the reference engine only: no extra compile."""
+        tr = fault_runs["tr"]
+        again = run_ref(tr, SYS, "ts")
+        assert_fault_fields_equal(again, fault_runs["ref"])
+        other = run_ref(tr, JETSON_NANO.with_faults(
+            dataclasses.replace(FM, seed=FM.seed + 1)), "ts")
+        same_log = np.array_equal(np.asarray(other["victim_row"]),
+                                  np.asarray(fault_runs["ref"]["victim_row"]))
+        assert int(other["flips"]) != int(fault_runs["ref"]["flips"]) \
+            or not same_log
+
+
+class TestZeroCostOff:
+    def test_faults_fork_group_keys(self, fault_runs):
+        tr = fault_runs["tr"]
+        assert emulator.group_key(tr.n, SYS, "ts", None) != \
+            emulator.group_key(tr.n, JETSON_NANO, "ts", None)
+        assert JETSON_NANO.faults is None
+
+    def test_off_results_have_no_fault_fields_and_timing_matches(
+            self, fault_runs):
+        """faults=None results carry no fault keys, and — without a
+        mitigating policy — fault modeling never perturbs scheduling:
+        exec_cycles match exactly."""
+        tr = fault_runs["tr"]
+        off = run(tr, JETSON_NANO, "ts")
+        assert "flips" not in off and "bit_error_rate" not in off
+        assert int(off["exec_cycles"]) == \
+            int(fault_runs["fast"]["exec_cycles"])
+        np.testing.assert_array_equal(off["t_resp"],
+                                      fault_runs["fast"]["t_resp"])
+
+    def test_with_faults_validates(self):
+        with pytest.raises(ValueError, match="victim_slots"):
+            JETSON_NANO.with_faults(dataclasses.replace(FM, victim_slots=0))
+        with pytest.raises(ValueError, match="hammer_flip_fp"):
+            FaultModel(hammer_flip_fp=65537).validate()
+        with pytest.raises(ValueError, match="retention_ticks"):
+            FaultModel(retention_ticks=-1).validate()
+        assert JETSON_NANO.with_faults(None).faults is None
+
+
+class TestMitigationPolicies:
+    def test_trr_program_suppresses_flips_both_engines(self, fault_runs):
+        """Counter-based TRR with a trigger below the hammer threshold
+        must drive hammer flips to zero, cost >0 mitigations and slow
+        the bank down — identically in both engine cores (one compile)."""
+        tr = fault_runs["tr"]
+        fm = dataclasses.replace(FM, weak_fp=0)  # isolate the hammer arm
+        prog = smcprog.mitigation_programs(trr_threshold=4)["trr4"]
+        sysm = dataclasses.replace(
+            JETSON_NANO, policy=prog).with_faults(fm)
+        fast = run(tr, sysm, "ts")
+        ref = run_ref(tr, sysm, "ts")
+        assert_fault_fields_equal(fast, ref)
+        assert int(fast["ham_flips"]) == 0
+        assert int(fast["mitigations"]) > 0
+        base = fault_runs["fast"]
+        assert int(fast["exec_cycles"]) > 0
+        # mitigation charges neighbor-refresh ticks: never faster than
+        # the unmitigated run of the same trace
+        assert int(fast["exec_cycles"]) >= int(base["exec_cycles"])
+
+    def test_mitigation_program_set(self):
+        progs = smcprog.mitigation_programs(para_fp=700, trr_threshold=9)
+        assert set(progs) == {"frfcfs", "para700", "trr9"}
+        assert progs["frfcfs"].mitigate_reg < 0
+        for nm in ("para700", "trr9"):
+            assert progs[nm].mitigate_reg >= 0
+            progs[nm].validate()
+        # builtin program set unchanged: mitigation arms are opt-in
+        assert not set(smcprog.builtin_programs()) & {"para700", "trr9"}
+
+    def test_legacy_digests_unaffected_by_mitigate_field(self):
+        """Programs without a mitigate output must hash exactly as they
+        did before the field existed (compile/persistent caches)."""
+        p = smcprog.frfcfs_program()
+        assert p.mitigate_reg == -1
+        q = dataclasses.replace(p, mitigate_reg=-1)
+        assert p.digest == q.digest
+        r = dataclasses.replace(p, mitigate_reg=0)
+        assert r.digest != p.digest
