@@ -823,6 +823,141 @@ def bench_faults(n_requests=2000, n_traces=4, intensities=(0.5, 0.9),
     return rows
 
 
+# ---------------- sweep service: multi-tenant shared engine ----------------
+
+def bench_service(n_requests=8, round_pts=1, k_clients=4, rounds=60,
+                  pairs=3):
+    """Sweep-service multi-tenant throughput (ISSUE 9), three gated
+    claims.
+
+    (1) Shared-engine scaling (``service_scaling_x``, gated >= 0.7*K):
+    K closed-loop clients hammering one ``SweepServer`` with same-group
+    rounds of ``round_pts`` points each must reach at least 0.7*K the
+    aggregate throughput of ONE client on its own server. On a
+    single device this headroom can only come from cross-client
+    coalescing: K concurrent rounds merge into one K*round_pts-point
+    dispatch whose vmapped scan costs barely more than a round_pts one
+    (batch amortization), so the shared server retires ~K rounds per
+    dispatch wall. Each arm runs in its best configuration
+    (``max_batch`` = its natural round size; both compile keys warmed
+    before timing) — the comparison is K tenants SHARING a server vs a
+    tenant OWNING one, not a rigged window.
+
+    (2) Cross-client coalescing really happens
+    (``service_clients_per_dispatch``, gated > 1.0): mean distinct
+    clients per dispatch over the K-client phase.
+
+    (3) No admission drops at default bounds (``service_rejected``,
+    gated == 0): the closed-loop load must ride backpressure bounds
+    without a single typed rejection.
+
+    Arms alternate single/K ``pairs`` times (drift hits both), cyclic
+    GC parked during timed regions as in ``_paired_ratio``; medians
+    reported."""
+    import gc
+    import threading as _threading
+
+    from repro.core.campaign import Point
+    from repro.service import SweepClient, SweepServer
+
+    rng = np.random.RandomState(0)
+
+    def mk():
+        return Trace.of(kind=rng.randint(0, 2, n_requests),
+                        bank=rng.randint(0, 16, n_requests),
+                        row=rng.randint(0, 4096, n_requests),
+                        delta=rng.randint(1, 8, n_requests),
+                        dep=rng.randint(0, 2, n_requests))
+
+    pool = [[mk() for _ in range(round_pts)] for _ in range(k_clients)]
+
+    def round_points(k):
+        return [Point(t, JETSON_NANO, "ts") for t in pool[k]]
+
+    def run_single():
+        """One tenant owning a server: rounds flush at max_batch ==
+        round_pts, no coalesce wait on its critical path."""
+        with SweepServer(max_batch=round_pts,
+                         coalesce_window_s=0.05) as srv:
+            cli = SweepClient(server=srv, name="solo")
+            cli.submit_points(round_points(0))
+            cli.collect()                      # warm the round_pts key
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                cli.submit_points(round_points(0))
+                cli.collect()
+            dt = time.perf_counter() - t0
+        return rounds * round_pts / dt
+
+    def run_k():
+        """K tenants sharing one server: lockstep closed-loop rounds
+        merge at max_batch == K*round_pts."""
+        walls, errs = [], []
+        barrier = _threading.Barrier(k_clients)
+        with SweepServer(max_batch=k_clients * round_pts,
+                         coalesce_window_s=0.005) as srv:
+            def drive(k):
+                try:
+                    cli = SweepClient(server=srv, name=f"c{k}")
+                    cli.submit_points(round_points(k))
+                    cli.collect()              # warm the K*round_pts key
+                    barrier.wait()
+                    t0 = time.perf_counter()
+                    for _ in range(rounds):
+                        cli.submit_points(round_points(k))
+                        cli.collect()
+                    walls.append(time.perf_counter() - t0)
+                except BaseException as e:  # pragma: no cover
+                    errs.append(e)
+            threads = [_threading.Thread(target=drive, args=(k,))
+                       for k in range(k_clients)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(600)
+            st = srv.stats()
+        if errs:
+            raise errs[0]
+        return k_clients * rounds * round_pts / max(walls), st
+
+    def timed(f):
+        gc.collect()
+        gc.disable()
+        try:
+            return f()
+        finally:
+            gc.enable()
+
+    # warm BOTH compile keys (round_pts and K*round_pts batch buckets)
+    # through the exact key-derivation path the service dispatches use,
+    # so no arm ever pays a compile inside a timed region
+    run_many([t for c in pool for t in c], JETSON_NANO, "ts")
+    run_many(pool[0], JETSON_NANO, "ts")
+
+    singles, ks, coals, rej = [], [], [], 0
+    for _ in range(pairs):
+        singles.append(timed(run_single))
+        tput_k, st = timed(run_k)
+        ks.append(tput_k)
+        coals.append(st["coalesce_ratio"])
+        rej += int(st["rejected"])
+    tput_s = sorted(singles)[len(singles) // 2]
+    tput_k = sorted(ks)[len(ks) // 2]
+    coal = sorted(coals)[len(coals) // 2]
+    scaling = tput_k / max(tput_s, 1e-9)
+    return [
+        ("service_tput_single_pps", round(tput_s, 1),
+         f"1_client_rounds_of_{round_pts}x{n_requests}req"),
+        ("service_tput_k_pps", round(tput_k, 1),
+         f"{k_clients}_clients_shared_server"),
+        ("service_scaling_x", round(scaling, 2),
+         f"accept>={0.7 * k_clients:.1f}_via_coalesced_batching"),
+        ("service_clients_per_dispatch", round(coal, 2),
+         "accept>1_mean_distinct_clients_per_dispatch"),
+        ("service_rejected", rej, "accept==0_at_default_bounds"),
+    ]
+
+
 # ---------------- LM x EasyDRAM: the framework tie-in ----------------
 
 def bench_lm_traces():

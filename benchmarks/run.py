@@ -37,6 +37,14 @@ leave compile/group keys untouched (``faults_off_compile_keys_equal``
 no-fault-model arm (``faults_off_overhead_x``), and a checkpointed
 campaign re-run must recompute zero finished groups
 (``faults_ckpt_resume_recomputed`` == 0).
+ISSUE 9 gates (``--quick``, section ``service``): K=4 concurrent
+clients sharing one ``SweepServer`` must keep >= 0.7*K the aggregate
+throughput of a solo client on its own server
+(``service_scaling_x`` — only reachable through cross-client
+coalescing on a single device), dispatches must actually mix clients
+(``service_clients_per_dispatch`` > 1), and zero points may be
+rejected at the default admission bounds (``service_rejected`` == 0).
+The reference run is ``--section service --out artifacts/BENCH_9.json``.
 """
 from __future__ import annotations
 
@@ -63,6 +71,13 @@ FAULTS_KEYS_ROW = "faults_off_compile_keys_equal"
 FAULTS_OFF_ROW = "faults_off_overhead_x"
 FAULTS_OFF_GATE = 1.05  # disabled fault carry vs no fault model at all
 FAULTS_CKPT_ROW = "faults_ckpt_resume_recomputed"
+SERVICE_K = 4              # clients in the shared-server arm
+SERVICE_SCALING_ROW = "service_scaling_x"
+SERVICE_SCALING_GATE = 0.7 * SERVICE_K  # K tenants sharing one engine
+#                          must keep >= 0.7*K of a solo tenant's rate
+#                          (cross-client coalescing + batch amortization)
+SERVICE_COAL_ROW = "service_clients_per_dispatch"
+SERVICE_REJ_ROW = "service_rejected"
 
 
 def _env_header() -> dict:
@@ -120,6 +135,8 @@ def main() -> None:
         "faults": (lambda: paper.bench_faults(
             n_requests=800, study_requests=600)) if args.quick
         else paper.bench_faults,                                # PR 8 faults
+        "service": (lambda: paper.bench_service(rounds=40, pairs=3))
+        if args.quick else paper.bench_service,                 # ISSUE 9 service
         "lm_traces": paper.bench_lm_traces,                     # framework tie-in
         "kernels": kernels_bench.bench_kernels,
         "roofline": lambda: roofline.csv_rows(roofline.load_records("sp")),
@@ -158,7 +175,9 @@ def main() -> None:
             if r[0] in (STEADY_ROW, POLICY_ROW, EXEC_ROW,
                         PCACHE_HITS_ROW, PCACHE_MISSES_ROW,
                         STREAM_RATIO_ROW, STREAM_KEYS_ROW, STREAM_RSS_ROW,
-                        FAULTS_KEYS_ROW, FAULTS_OFF_ROW, FAULTS_CKPT_ROW):
+                        FAULTS_KEYS_ROW, FAULTS_OFF_ROW, FAULTS_CKPT_ROW,
+                        SERVICE_SCALING_ROW, SERVICE_COAL_ROW,
+                        SERVICE_REJ_ROW):
                 gate_values[r[0]] = float(r[1])
         report["sections"][name] = {
             "rows": [list(r) for r in rows],
@@ -244,6 +263,25 @@ def main() -> None:
         if recomputed is None or recomputed != 0:
             failures += 1
             print(f"_faults_gate,FAIL,{FAULTS_CKPT_ROW}={recomputed}")
+    # sweep-service gates: K tenants sharing one warm engine must keep
+    # >= 0.7*K of a solo tenant's throughput (only reachable through
+    # cross-client coalescing on a single device), dispatches must
+    # actually mix clients, and the closed-loop load must ride the
+    # default admission bounds without one typed rejection
+    if "service" in sections and not report["sections"]["service"]["error"]:
+        scaling = gate_values.get(SERVICE_SCALING_ROW)
+        if scaling is None or scaling < SERVICE_SCALING_GATE:
+            failures += 1
+            print(f"_service_gate,FAIL,{SERVICE_SCALING_ROW}={scaling}"
+                  f"<gate={SERVICE_SCALING_GATE}")
+        coal = gate_values.get(SERVICE_COAL_ROW)
+        if coal is None or coal <= 1.0:
+            failures += 1
+            print(f"_service_gate,FAIL,{SERVICE_COAL_ROW}={coal}<=1.0")
+        rej = gate_values.get(SERVICE_REJ_ROW)
+        if rej is None or rej != 0:
+            failures += 1
+            print(f"_service_gate,FAIL,{SERVICE_REJ_ROW}={rej}")
 
     report["cache_stats"] = emulator.cache_stats()
     report["failures"] = failures

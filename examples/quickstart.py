@@ -116,6 +116,23 @@ def main():
           f"{int(guarded['exec_cycles']) / int(plain['exec_cycles']):.3f}x "
           f"cycles")
 
+    # shared sweep server (ISSUE 9): many clients, one warm engine —
+    # compatible points from different clients coalesce into shared
+    # batched dispatches, bit-identical to a direct Campaign.run (see
+    # examples/sweep_service.py for the full two-client walkthrough)
+    from repro.service import SweepClient, SweepServer
+    with SweepServer() as srv:
+        cli = SweepClient(server=srv, name="quickstart")
+        for i in range(3):
+            t, _ = traces.polybench_trace(traces.POLYBENCH[i], geo,
+                                          max_accesses=500, seed=i)
+            cli.submit(t, JETSON_NANO, mode="ts", workload=i)
+        recs = cli.collect()
+        st = srv.stats()
+    print(f"\nsweep service: {len(recs)} points in "
+          f"{st['dispatches']['count']} dispatch(es), "
+          f"p50 latency {st['latency_ms']['p50']:.1f} ms")
+
 
 if __name__ == "__main__":
     main()

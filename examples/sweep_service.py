@@ -1,0 +1,97 @@
+"""Two sweep clients sharing one warm engine (ISSUE 9).
+
+Run:  PYTHONPATH=src python examples/sweep_service.py
+
+Two tenant threads — a "rowhammer" study and a "scheduling" study —
+drive the SAME `SweepServer`. Both sweep the same polybench traces, so
+their points land in the same campaign groups and the server coalesces
+them into shared batched dispatches: the engine compiles each
+executable once and each device dispatch retires points for BOTH
+clients. The printed `coalesce_ratio` (mean distinct clients per
+dispatch) shows the cross-client sharing; results are bit-identical to
+each client running its own `Campaign`.
+
+For separate processes, start the server standalone
+
+    PYTHONPATH=src python -m repro.service --port 7421
+
+and attach with ``SweepClient(address=("127.0.0.1", 7421))`` instead
+of ``SweepClient(server=srv)`` — same API, same results.
+"""
+import threading
+
+from repro.core import traces
+from repro.core.faults import FaultModel
+from repro.core.smcprog import mitigation_programs
+from repro.core.timescale import JETSON_NANO
+from repro.service import SweepClient, SweepServer
+
+GEO = JETSON_NANO.geometry
+WORKLOADS = traces.POLYBENCH[:4]
+
+
+def hammer_study(srv, out):
+    """Tenant A: fault impact per workload — a fault-free baseline
+    point plus a RowHammer-prone arm. The baseline points use the same
+    (system, mode, length-bucket) group as tenant B's baselines, so
+    the server coalesces the two tenants' baselines into shared
+    dispatches."""
+    fm = FaultModel(seed=7, hammer_threshold=16, hammer_flip_fp=52000)
+    cli = SweepClient(server=srv, name="hammer", weight=1.0)
+    for w in WORKLOADS:
+        tr, _ = traces.polybench_trace(w, GEO, max_accesses=800, seed=0)
+        cli.submit(tr, JETSON_NANO, mode="ts", workload=w.name,
+                   arm="baseline")
+        cli.submit(tr, JETSON_NANO.with_faults(fm), mode="ts",
+                   workload=w.name, arm="faults")
+    out["hammer"] = cli.collect()
+
+
+def policy_study(srv, out):
+    """Tenant B: TRR mitigation cost — the same baseline grid as
+    tenant A (coalesced with it) plus a TRR-policy arm."""
+    trr = mitigation_programs(trr_threshold=16)["trr16"]
+    cli = SweepClient(server=srv, name="policy", weight=1.0)
+    for w in WORKLOADS:
+        tr, _ = traces.polybench_trace(w, GEO, max_accesses=800, seed=0)
+        cli.submit(tr, JETSON_NANO, mode="ts", workload=w.name,
+                   arm="baseline")
+        cli.submit(tr, JETSON_NANO.with_policy(trr), mode="ts",
+                   workload=w.name, arm="trr16")
+    out["policy"] = cli.collect()
+
+
+def main():
+    out = {}
+    with SweepServer(coalesce_window_s=0.05) as srv:
+        threads = [threading.Thread(target=hammer_study, args=(srv, out)),
+                   threading.Thread(target=policy_study, args=(srv, out))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        st = srv.stats()
+
+    print("tenant A (fault impact):")
+    for r in out["hammer"]:
+        if r["arm"] == "faults":
+            print(f"  {r['workload']:<12} flips={int(r['flips'])} "
+                  f"(BER {float(r['bit_error_rate']):.5f})")
+    print("tenant B (TRR mitigation cost):")
+    base = {r["workload"]: r for r in out["policy"] if r["arm"] == "baseline"}
+    for r in out["policy"]:
+        if r["arm"] == "trr16":
+            slow = int(r["exec_cycles"]) / int(base[r["workload"]]
+                                               ["exec_cycles"])
+            print(f"  {r['workload']:<12} {slow:.3f}x cycles")
+    d = st["dispatches"]
+    print(f"\nserver: {d['points']} points in {d['count']} dispatches "
+          f"({st['points_per_dispatch']:.1f} points/dispatch), "
+          f"coalesce_ratio={st['coalesce_ratio']:.2f} "
+          f"(>1.0 means dispatches served BOTH tenants), "
+          f"compile misses={st['compile']['misses']}, "
+          f"p50 latency {st['latency_ms']['p50']:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

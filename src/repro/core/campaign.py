@@ -79,6 +79,39 @@ class Point:
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
     stream: bool = False
     chunk: Optional[int] = None         # stream window size (stream only)
+    # memoized content_digest() — not part of identity/compares
+    _digest: Optional[str] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def content_digest(self) -> str:
+        """sha1 hex digest of this point's result-relevant content: the
+        mode plus every trace array plus bloom words/params (meta is
+        excluded — it is re-applied at merge time). Memoized on the
+        point, so repeated :func:`_group_digest` calls — a second
+        ``Campaign.run(checkpoint=...)``, or the sweep service's
+        per-dispatch checkpoint path under load — hash each large trace
+        exactly once instead of once per call. Points are treated as
+        immutable after ``add``; mutating a trace in place after the
+        first digest would go unnoticed (the same assumption the
+        executor's ``pack`` closures already make). Stream points have
+        no content address (one-shot iterators) and raise."""
+        if self.stream:
+            raise ValueError(
+                "stream points have no content digest (their input is a "
+                "one-shot iterator); checkpointing skips them")
+        if self._digest is None:
+            h = hashlib.sha1()
+            h.update(self.mode.encode())
+            for f in ("kind", "bank", "row", "delta", "dep"):
+                h.update(np.ascontiguousarray(
+                    np.asarray(getattr(self.trace, f), np.int32)).tobytes())
+            if self.bloom is not None:
+                h.update(np.ascontiguousarray(
+                    np.asarray(self.bloom[0])).tobytes())
+                h.update(repr((int(self.bloom[1]),
+                               int(self.bloom[2]))).encode())
+            self._digest = h.hexdigest()
+        return self._digest
 
     def group_key(self) -> tuple:
         # emulator.group_key is the single source of truth for bucket /
@@ -98,23 +131,19 @@ class Point:
 def _group_digest(key: tuple, pts: Sequence[Point]) -> str:
     """Content address of one compile-key group's RESULTS: the group key
     (system config, mode, shapes — policy and fault models included via
-    SystemConfig) plus every member trace's actual arrays, modes, and
-    bloom words, in group order. Two campaigns computing the same digest
-    would produce bit-identical ``outs`` for the group — which is what
-    makes checkpoint resume safe: a stale or foreign file can only
-    collide by content, not by position. Meta is deliberately excluded
-    (it is re-applied at merge time from the in-memory points)."""
+    SystemConfig) plus every member point's memoized
+    :meth:`Point.content_digest` (mode + trace arrays + bloom words),
+    in group order. Two campaigns computing the same digest would
+    produce bit-identical ``outs`` for the group — which is what makes
+    checkpoint resume safe: a stale or foreign file can only collide by
+    content, not by position. The per-point hashing is hoisted into the
+    point (one O(trace) hash per point per process, however many
+    ``run(checkpoint=...)`` calls or service drain-and-checkpoint
+    passes re-derive the group path)."""
     h = hashlib.sha1()
     h.update(repr(key).encode())
     for p in pts:
-        h.update(p.mode.encode())
-        for f in ("kind", "bank", "row", "delta", "dep"):
-            h.update(np.ascontiguousarray(
-                np.asarray(getattr(p.trace, f), np.int32)).tobytes())
-        if p.bloom is not None:
-            h.update(np.ascontiguousarray(
-                np.asarray(p.bloom[0])).tobytes())
-            h.update(repr((int(p.bloom[1]), int(p.bloom[2]))).encode())
+        h.update(p.content_digest().encode())
     return h.hexdigest()[:16]
 
 

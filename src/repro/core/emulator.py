@@ -855,15 +855,30 @@ def cache_stats() -> dict:
     """Executable-cache counters since the last :func:`cache_clear`:
     ``hits`` / ``misses`` (misses == in-process compiles) over
     :func:`run_many` lookups, ``evictions`` (LRU drops past
-    ``capacity``), plus current ``size`` / ``capacity``. ``persistent``
-    mirrors the on-disk XLA cache counters when
+    ``capacity``), plus current ``size`` / ``capacity`` and the derived
+    ``lookups`` (= hits + misses). ``persistent`` mirrors the on-disk
+    XLA cache counters when
     :func:`repro.utils.jax_compat.enable_persistent_compile_cache` is
-    active (all-zero otherwise)."""
+    active (all-zero otherwise).
+
+    The snapshot is CONSISTENT: every LRU field is read in one
+    ``_CACHE_LOCK`` region — the same lock every writer
+    (``_batched_fn`` / ``_stream_fn`` lookups, ``set_cache_capacity``
+    shrinks, ``cache_clear``) holds across its whole update — so a
+    concurrent reader (a sweep-service stats poll while dispatchers
+    resolve executables) can never observe a torn view: ``lookups ==
+    hits + misses``, ``size <= capacity``, and
+    ``size == misses - evictions`` (counters monotone between clears)
+    all hold in any returned dict, which
+    ``tests/test_service.py::test_cache_stats_consistent_under_threads``
+    hammers from threads. Only ``persistent`` is sampled outside the
+    lock — it belongs to jax's process-global cache, not this LRU."""
     from repro.utils import jax_compat
     with _CACHE_LOCK:
         out = dict(_CACHE_STATS)
         out["size"] = len(_COMPILE_CACHE)
         out["capacity"] = _CACHE_CAP
+        out["lookups"] = out["hits"] + out["misses"]
     out["persistent"] = jax_compat.persistent_cache_stats()
     return out
 

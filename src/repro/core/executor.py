@@ -33,18 +33,20 @@ Worker threads only ever touch jax through executable calls and
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import os
 import threading
 import time
 import warnings
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = ["GroupTask", "StreamTask", "TaskFailure", "ExecutionError",
-           "execute", "set_workers", "workers"]
+           "execute", "submit_task", "set_workers", "workers",
+           "shutdown", "is_shutdown"]
 
 
 @dataclasses.dataclass
@@ -123,7 +125,10 @@ class StreamTask:
         done, stop = object(), threading.Event()
 
         def put(item) -> bool:
-            while not stop.is_set():
+            # _SHUTDOWN poisons the feed at interpreter exit: a prefetch
+            # thread mid-stream must not keep generating windows (or
+            # block forever on a full queue) while the process tears down
+            while not stop.is_set() and not _SHUTDOWN.is_set():
                 try:
                     q.put(item, timeout=0.1)
                     return True
@@ -145,7 +150,19 @@ class StreamTask:
         th.start()
         try:
             while True:
-                args = q.get()
+                try:
+                    args = q.get(timeout=0.2)
+                except _queue.Empty:
+                    # a poisoned feeder (interpreter shutdown) never
+                    # delivers its `done` sentinel — fail the window
+                    # loop instead of blocking a non-daemon pool worker
+                    # forever (which would deadlock interpreter exit)
+                    if _SHUTDOWN.is_set():
+                        raise RuntimeError(
+                            f"stream task {self.label or 'task'!r} "
+                            f"aborted: executor shut down at interpreter "
+                            f"exit")
+                    continue
                 if args is done:
                     break
                 if isinstance(args, BaseException):
@@ -200,6 +217,9 @@ def _workers_default() -> int:
 _LOCK = threading.Lock()
 _POOL: Optional[ThreadPoolExecutor] = None
 _WORKERS = _workers_default()
+# set once, at interpreter exit (or by an explicit shutdown()): poisons
+# StreamTask prefetch feeds and queue waits so no worker blocks teardown
+_SHUTDOWN = threading.Event()
 
 
 def workers() -> int:
@@ -215,6 +235,7 @@ def set_workers(n: int) -> int:
         raise ValueError(f"worker count must be >= 1, got {n}")
     with _LOCK:
         old = _WORKERS
+        _SHUTDOWN.clear()   # re-arm after an explicit shutdown() (tests)
         if n != _WORKERS:
             if _POOL is not None:
                 _POOL.shutdown(wait=True)
@@ -226,10 +247,45 @@ def set_workers(n: int) -> int:
 def _pool() -> ThreadPoolExecutor:
     global _POOL
     with _LOCK:
+        if _SHUTDOWN.is_set():
+            raise RuntimeError(
+                "executor pool is shut down (interpreter exit or explicit "
+                "executor.shutdown()); no further dispatches accepted")
         if _POOL is None:
             _POOL = ThreadPoolExecutor(
                 max_workers=_WORKERS, thread_name_prefix="repro-exec")
         return _POOL
+
+
+def is_shutdown() -> bool:
+    """True once the executor has been poisoned (interpreter exit or an
+    explicit :func:`shutdown`); new dispatches are refused."""
+    return _SHUTDOWN.is_set()
+
+
+def shutdown(wait: bool = False) -> None:
+    """Drain/poison the executor for process teardown.
+
+    Ordering matters at interpreter exit: ThreadPoolExecutor's own
+    threading hook JOINS its (non-daemon) worker threads, so any worker
+    blocked on a queue — a StreamTask consumer whose prefetch feeder
+    died, a feeder stuck in ``q.put`` — would deadlock ``python`` on
+    exit, and a killed client could leave a server's dispatch threads
+    holding the device indefinitely. This runs FIRST (module ``atexit``
+    handlers precede threading's join of non-daemon threads): it poisons
+    the StreamTask feed/consume loops via the module event, cancels
+    queued-but-unstarted tasks, and lets in-flight XLA executions finish
+    on their own (they cannot be interrupted, only awaited). Idempotent;
+    :func:`set_workers` after an explicit shutdown re-arms the pool."""
+    global _POOL
+    _SHUTDOWN.set()
+    with _LOCK:
+        pool, _POOL = _POOL, None
+    if pool is not None:
+        pool.shutdown(wait=wait, cancel_futures=True)
+
+
+atexit.register(shutdown)
 
 
 @dataclasses.dataclass
@@ -276,6 +332,24 @@ def _attempt(task: Any, retries: int, backoff: float
                 return TaskFailure(task, getattr(task, "label", ""),
                                    e, attempts)
             time.sleep(backoff * (2 ** (attempts - 1)))
+
+
+def submit_task(task: Any, retries: Optional[int] = None,
+                backoff: Optional[float] = None) -> "Future":
+    """Asynchronous single-task entry point (what the sweep service's
+    dispatcher uses): submit one PREPARED task to the overlapped worker
+    pool and return its :class:`concurrent.futures.Future`, which
+    resolves to ``None`` on success or a :class:`TaskFailure` record —
+    never an exception (same ``_attempt`` semantics as :func:`execute`,
+    including bounded retry-with-backoff for retryable tasks). The
+    caller owns result demultiplexing: the task's ``finalize`` has run
+    by the time the future resolves ``None``. Raises ``RuntimeError``
+    after :func:`shutdown` (teardown refuses new dispatches)."""
+    if retries is None:
+        retries = max(0, _env_int("REPRO_EXEC_RETRIES", 0))
+    if backoff is None:
+        backoff = float(os.environ.get("REPRO_EXEC_BACKOFF_S", "") or 0.05)
+    return _pool().submit(_attempt, task, retries, backoff)
 
 
 def execute(tasks: Sequence[Any], serial: Optional[bool] = None,

@@ -2,10 +2,18 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma_7b --preset tiny \
       --batch 4 --new 16
+
+Also fronts the sweep service (shared multi-client campaign server):
+
+  PYTHONPATH=src python -m repro.launch.serve sweep --port 7421
+
+which is equivalent to ``python -m repro.service`` (see that module for
+the full flag set).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -18,6 +26,10 @@ from repro.serve.engine import ServeEngine
 
 
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "sweep":
+        from repro.service.__main__ import main as sweep_main
+        sweep_main(sys.argv[2:])
+        return
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))

@@ -186,6 +186,64 @@ def test_overlapped_executor_bit_identical_to_serial(seed, force_shard):
         np.testing.assert_array_equal(x["t_issue"], y["t_issue"])
 
 
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 3))
+def test_sweep_service_bit_identical_to_serial(seed, n_clients):
+    """ISSUE 9 contract: K concurrent `SweepClient`s submitting an
+    interleaved randomized grid through one `SweepServer` (points from
+    different clients coalescing into shared dispatches) get records
+    bit-identical to `Campaign.run(serial=True)` over the same points,
+    each client's results in its own submission order."""
+    import dataclasses
+    import threading
+    from repro.core import smcprog
+    from repro.core.campaign import Campaign, Point
+    from repro.service import SweepClient, SweepServer
+    rng = np.random.RandomState(seed % (2 ** 31))
+    bf = BloomFilter.build(rng.randint(0, 1 << 19, 100).astype(np.uint32),
+                           m_bits=1 << 14, k=3)
+    bloom = (bf.bits, bf.k, bf.m_bits)
+    sys_pol = dataclasses.replace(JETSON_NANO, policy=smcprog.frfcfs_program())
+    pts = []
+    for i in range(int(rng.randint(3, 7))):
+        n = int(rng.randint(8, 90))
+        tr = Trace.of(kind=rng.randint(0, 5, n), bank=rng.randint(0, 16, n),
+                      row=rng.randint(0, 4096, n),
+                      delta=rng.randint(0, 24, n), dep=rng.randint(0, 3, n))
+        mode = ("ts", "nots", "reference")[int(rng.randint(3))]
+        sysc = (JETSON_NANO, sys_pol)[int(rng.randint(2))]
+        bl = bloom if mode == "ts" and rng.rand() < 0.5 else None
+        pts.append(Point(tr, sysc, mode, bl, {"idx": i}))
+    c = Campaign()
+    for p in pts:
+        c.add(p.trace, p.sys, mode=p.mode, bloom=p.bloom, **p.meta)
+    ref = {r["idx"]: r for r in c.run(serial=True)}
+    got, errs = {}, []
+    with SweepServer(coalesce_window_s=0.05) as srv:
+        def drive(k):
+            try:
+                cli = SweepClient(server=srv, name=f"c{k}")
+                mine = [p for j, p in enumerate(pts) if j % n_clients == k]
+                cli.submit_points(mine)
+                for p, r in zip(mine, cli.collect()):
+                    assert r["idx"] == p.meta["idx"]
+                    got[r["idx"]] = r
+            except BaseException as e:
+                errs.append(e)
+        threads = [threading.Thread(target=drive, args=(k,))
+                   for k in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(180)
+    assert not errs, errs
+    assert set(got) == set(ref)
+    for i, r in ref.items():
+        assert int(got[i]["exec_cycles"]) == int(r["exec_cycles"])
+        np.testing.assert_array_equal(got[i]["t_resp"], r["t_resp"])
+        np.testing.assert_array_equal(got[i]["t_issue"], r["t_issue"])
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 200),
        st.integers(8, 64), st.sampled_from([1, 2, 4]),
