@@ -650,7 +650,11 @@ def bench_policy_sweep(n_traces=8, n_requests=1200):
     programs = list(smcprog.builtin_programs().values())
     c = Campaign()
     for i, tr in enumerate(trs[:2]):
-        c.add_policy_grid(tr, sys_hard, programs, mode="ts", i=i)
+        # policy_axis=False on purpose: this section pins the STAGED
+        # per-program path (the PR-4 contract the policy_axis section
+        # measures its speedup against)
+        c.add_policy_grid(tr, sys_hard, programs, mode="ts", i=i,
+                          policy_axis=False)
     recs = c.run()
     stats = emulator.cache_stats()
     assert c.n_groups() == len(programs), \
@@ -668,6 +672,111 @@ def bench_policy_sweep(n_traces=8, n_requests=1200):
     rows.append(("policy_sweep_grid_compiles", stats["misses"],
                  f"one_per_program_group_of_{len(programs)}"))
     return rows
+
+
+def bench_policy_axis(n_requests=1200, n_policies=256, n_baseline=6):
+    """ISSUE 10: the runtime policy operand + vmapped policy axis.
+
+    (1) Compile scaling: a ``n_policies``-candidate sweep (two table-
+    length buckets by construction) must compile exactly once per
+    BUCKET, not once per program (``policy_axis_compiles`` ==
+    ``policy_axis_buckets``, gated in run.py).
+
+    (2) Throughput: the batched axis at ``n_policies`` candidates must
+    beat the PR-4 staged per-program loop >= 5x per policy
+    (``policy_axis_speedup_x``). The staged arm recompiles per program
+    (content rides its compile key), so it is measured cold on
+    ``n_baseline`` programs and extrapolated linearly — charitable to
+    the baseline, since its per-policy cost only grows with the sweep.
+
+    (3) Bit-identity: axis results must equal the staged runs exactly
+    (``policy_axis_bitident``), and the Pallas policy-VM kernel must
+    match the jnp reference on the same tables
+    (``policy_axis_pallas_bitident``)."""
+    from repro.core import smcprog
+    from repro.core.policysearch import random_program
+
+    rng = np.random.RandomState(29)
+    delta = np.where(np.arange(n_requests) % 8 == 0, 400, 0)
+    row = np.where(rng.rand(n_requests) < 0.6, 7,
+                   rng.randint(0, 4096, n_requests))
+    tr = Trace.of(kind=rng.randint(0, 2, n_requests),
+                  bank=rng.randint(0, 4, n_requests),
+                  row=row, delta=delta)
+    sys = dataclasses.replace(JETSON_NANO, window=8)
+
+    # candidate population: bucket-8 randoms + frfcfs, plus a handful of
+    # wide (bucket-16) programs so the compile gate counts BUCKETS
+    progs = [random_program(rng, name=f"cand{i}")
+             for i in range(n_policies - 5)]
+    progs.append(smcprog.frfcfs_program())
+    while len(progs) < n_policies:
+        p = random_program(rng, max_ops=14, name=f"wide{len(progs)}")
+        if p.n_ops > 8:
+            progs.append(p)
+    buckets = sorted({smcprog.table_bucket(p.n_ops) for p in progs})
+
+    # staged per-program baseline, cold: each program's content rides
+    # its compile key, so every one pays a fresh XLA compile
+    emulator.cache_clear()
+    t0 = time.perf_counter()
+    staged = [run(tr, dataclasses.replace(sys, policy=p), "ts")
+              for p in progs[:n_baseline]]
+    t_staged = time.perf_counter() - t0
+    assert emulator.cache_stats()["misses"] == n_baseline, \
+        "staged arm did not recompile per program"
+    per_staged = t_staged / n_baseline
+
+    # the policy axis, cold: one compile per table-length bucket
+    emulator.cache_clear()
+    t0 = time.perf_counter()
+    recs = emulator.run_policies(tr, sys, progs, mode="ts",
+                                 derive_cost=False)
+    t_axis = time.perf_counter() - t0
+    compiles = emulator.cache_stats()["misses"]
+    per_axis = t_axis / len(progs)
+    speedup = per_staged / max(per_axis, 1e-9)
+
+    # bit-identity against the staged runs (axis pads t_resp to the
+    # trace's length bucket exactly like the single-shot path)
+    bitident = 1
+    for p, a, b in zip(progs[:n_baseline], staged, recs):
+        if int(a["exec_cycles"]) != int(b["exec_cycles"]) or \
+                not np.array_equal(np.asarray(a["t_resp"]),
+                                   np.asarray(b["t_resp"])):
+            bitident = 0
+            break
+
+    # Pallas policy-VM kernel vs the jnp reference on one bucket
+    import jax.numpy as jnp
+    from repro.kernels.policy_vm import policy_vm_scores
+    from repro.kernels.ref import policy_vm_ref
+    b8 = [p for p in progs if smcprog.table_bucket(p.n_ops) == 8]
+    tables = jnp.asarray(smcprog.pack_stack(b8, bucket=8))
+    envm = jnp.asarray(rng.randint(0, 1 << 16, (smcprog.N_LOADS, 64)),
+                       np.int32)
+    pallas_ok = int(bool(jnp.array_equal(
+        policy_vm_scores(tables, envm, interpret=True),
+        policy_vm_ref(tables, envm))))
+
+    return [
+        ("policy_axis_n_policies", len(progs), f"{n_requests}_reqs"),
+        ("policy_axis_buckets", len(buckets),
+         "x".join(str(b) for b in buckets)),
+        # gate enforcement (== buckets) lives in benchmarks/run.py
+        ("policy_axis_compiles", compiles, "accept==buckets"),
+        ("policy_axis_staged_per_policy_s", round(per_staged, 3),
+         f"cold_{n_baseline}_programs"),
+        ("policy_axis_batched_s", round(t_axis, 3),
+         f"{len(progs)}_policies_cold"),
+        ("policy_axis_batched_per_policy_s", round(per_axis, 5),
+         "includes_bucket_compiles"),
+        # gate enforcement (>= 5x) lives in benchmarks/run.py
+        ("policy_axis_speedup_x", round(speedup, 2), "accept>=5x"),
+        ("policy_axis_bitident", bitident,
+         f"axis_vs_staged_{n_baseline}_programs"),
+        ("policy_axis_pallas_bitident", pallas_ok, "pallas == ref"),
+    ]
 
 
 # ---------------- PR 8: fault injection + resumable campaigns ----------------

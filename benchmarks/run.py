@@ -45,6 +45,15 @@ coalescing on a single device), dispatches must actually mix clients
 (``service_clients_per_dispatch`` > 1), and zero points may be
 rejected at the default admission bounds (``service_rejected`` == 0).
 The reference run is ``--section service --out artifacts/BENCH_9.json``.
+ISSUE 10 gates (``--quick``, section ``policy_axis``): a 256-candidate
+policy sweep through the runtime-operand axis must compile once per
+table-length BUCKET, not per program (``policy_axis_compiles`` ==
+``policy_axis_buckets``), beat the PR-4 staged per-program loop >= 5x
+per policy (``policy_axis_speedup_x``), stay bit-identical to the
+staged path (``policy_axis_bitident`` == 1), and the Pallas policy-VM
+kernel must match its jnp reference (``policy_axis_pallas_bitident``
+== 1). The reference run is ``--section policy_axis --out
+artifacts/BENCH_10.json``.
 """
 from __future__ import annotations
 
@@ -78,6 +87,12 @@ SERVICE_SCALING_GATE = 0.7 * SERVICE_K  # K tenants sharing one engine
 #                          (cross-client coalescing + batch amortization)
 SERVICE_COAL_ROW = "service_clients_per_dispatch"
 SERVICE_REJ_ROW = "service_rejected"
+PAXIS_COMPILES_ROW = "policy_axis_compiles"
+PAXIS_BUCKETS_ROW = "policy_axis_buckets"
+PAXIS_SPEEDUP_ROW = "policy_axis_speedup_x"
+PAXIS_SPEEDUP_GATE = 5.0  # batched axis vs staged per-program loop
+PAXIS_BITIDENT_ROW = "policy_axis_bitident"
+PAXIS_PALLAS_ROW = "policy_axis_pallas_bitident"
 
 
 def _env_header() -> dict:
@@ -137,6 +152,9 @@ def main() -> None:
         else paper.bench_faults,                                # PR 8 faults
         "service": (lambda: paper.bench_service(rounds=40, pairs=3))
         if args.quick else paper.bench_service,                 # ISSUE 9 service
+        "policy_axis": (lambda: paper.bench_policy_axis(
+            n_requests=400, n_baseline=4)) if args.quick
+        else paper.bench_policy_axis,                           # ISSUE 10 axis
         "lm_traces": paper.bench_lm_traces,                     # framework tie-in
         "kernels": kernels_bench.bench_kernels,
         "roofline": lambda: roofline.csv_rows(roofline.load_records("sp")),
@@ -177,7 +195,10 @@ def main() -> None:
                         STREAM_RATIO_ROW, STREAM_KEYS_ROW, STREAM_RSS_ROW,
                         FAULTS_KEYS_ROW, FAULTS_OFF_ROW, FAULTS_CKPT_ROW,
                         SERVICE_SCALING_ROW, SERVICE_COAL_ROW,
-                        SERVICE_REJ_ROW):
+                        SERVICE_REJ_ROW,
+                        PAXIS_COMPILES_ROW, PAXIS_BUCKETS_ROW,
+                        PAXIS_SPEEDUP_ROW, PAXIS_BITIDENT_ROW,
+                        PAXIS_PALLAS_ROW):
                 gate_values[r[0]] = float(r[1])
         report["sections"][name] = {
             "rows": [list(r) for r in rows],
@@ -282,6 +303,30 @@ def main() -> None:
         if rej is None or rej != 0:
             failures += 1
             print(f"_service_gate,FAIL,{SERVICE_REJ_ROW}={rej}")
+
+    # policy-axis gates (ISSUE 10): a 256-candidate sweep must compile
+    # once per table-length BUCKET (not per program), beat the staged
+    # per-program loop >= 5x per policy, and stay bit-identical to the
+    # staged path — with the Pallas policy-VM kernel matching its
+    # reference on the same tables
+    if "policy_axis" in sections \
+            and not report["sections"]["policy_axis"]["error"]:
+        compiles = gate_values.get(PAXIS_COMPILES_ROW)
+        buckets = gate_values.get(PAXIS_BUCKETS_ROW)
+        if compiles is None or buckets is None or compiles != buckets:
+            failures += 1
+            print(f"_policy_axis_gate,FAIL,{PAXIS_COMPILES_ROW}={compiles}"
+                  f"!=buckets={buckets}")
+        speedup = gate_values.get(PAXIS_SPEEDUP_ROW)
+        if speedup is None or speedup < PAXIS_SPEEDUP_GATE:
+            failures += 1
+            print(f"_policy_axis_gate,FAIL,{PAXIS_SPEEDUP_ROW}={speedup}"
+                  f"<gate={PAXIS_SPEEDUP_GATE}")
+        for rowname in (PAXIS_BITIDENT_ROW, PAXIS_PALLAS_ROW):
+            if gate_values.get(rowname) != 1:
+                failures += 1
+                print(f"_policy_axis_gate,FAIL,{rowname}="
+                      f"{gate_values.get(rowname)}")
 
     report["cache_stats"] = emulator.cache_stats()
     report["failures"] = failures

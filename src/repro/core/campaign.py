@@ -40,12 +40,14 @@ can replay production-scale traces next to padded micro-traces in one
 campaign. Stream points group on ``(chunk, sys, mode, bloom-shape)``
 with no length bucket at all.
 
-Policy sweeps (PR 4) are one more grid axis: :meth:`Campaign.add_policy_grid`
+Policy sweeps are one more grid axis: :meth:`Campaign.add_policy_grid`
 fans a trace out across a set of :class:`repro.core.smcprog.PolicyProgram`
-schedulers. Programs hash by instruction-table content, so each distinct
-program forms its own compile-key group (one batched dispatch per
-program), while same-content programs — and repeated traces under one
-program — share a group.
+schedulers. By default (``policy_axis=True``) the programs ride the
+runtime policy operand: every program whose packed table fits the same
+length bucket shares ONE compile-key group and ONE vmapped dispatch —
+256 same-bucket policies are one executable and one device call. The
+PR 4 staged-constant path (one compile-key group per distinct program)
+stays selectable with ``policy_axis=False`` for A/B.
 """
 from __future__ import annotations
 
@@ -79,6 +81,10 @@ class Point:
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
     stream: bool = False
     chunk: Optional[int] = None         # stream window size (stream only)
+    # runtime-operand policy axis (add_policy_grid(policy_axis=True)):
+    # the program rides the dispatch as data, sys stays policy-free
+    policy: Optional[PolicyProgram] = None
+    policy_cost: Optional[int] = None   # smc_cycles_per_decision operand
     # memoized content_digest() — not part of identity/compares
     _digest: Optional[str] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
@@ -110,6 +116,14 @@ class Point:
                     np.asarray(self.bloom[0])).tobytes())
                 h.update(repr((int(self.bloom[1]),
                                int(self.bloom[2]))).encode())
+            if self.policy is not None:
+                # packed table content + cost operand: two points with
+                # the same trace but different runtime policies must
+                # never share a checkpoint address
+                from repro.core.smcprog import pack_program
+                h.update(np.ascontiguousarray(
+                    pack_program(self.policy)).tobytes())
+                h.update(repr(int(self.policy_cost or 0)).encode())
             self._digest = h.hexdigest()
         return self._digest
 
@@ -125,7 +139,7 @@ class Point:
                     emulator._norm_mode(self.mode),
                     emulator._bloom_shape(self.bloom))
         return emulator.group_key(self.trace.n, self.sys, self.mode,
-                                  self.bloom)
+                                  self.bloom, policy=self.policy)
 
 
 def _group_digest(key: tuple, pts: Sequence[Point]) -> str:
@@ -215,14 +229,23 @@ class Campaign:
 
     def add_policy_grid(self, trace: Trace, sys: SystemConfig,
                         programs: Sequence[PolicyProgram], mode: str = "ts",
-                        derive_cost: bool = True, **meta) -> "Campaign":
+                        derive_cost: bool = True, policy_axis: bool = True,
+                        **meta) -> "Campaign":
         """Fan ``trace`` out across a grid of policy programs (one point
         per program; each record carries ``policy=<program name>`` plus
-        ``meta``). ``derive_cost=True`` routes through
-        ``sys.with_policy`` so each program's decision cost follows its
-        length — the ``ts`` vs ``nots`` SMC-slowness experiment;
-        ``derive_cost=False`` keeps ``sys``'s cost for bit-comparable
-        scheduling-only sweeps."""
+        ``meta``). ``derive_cost=True`` makes each program's decision
+        cost follow its length (``sys.with_policy`` semantics) — the
+        ``ts`` vs ``nots`` SMC-slowness experiment; ``derive_cost=False``
+        keeps ``sys``'s cost for bit-comparable scheduling-only sweeps.
+
+        ``policy_axis=True`` (default) rides the runtime policy operand:
+        every program's packed table must fit one shared length bucket
+        (``smcprog.table_bucket``), and the whole grid becomes ONE
+        compile-key group — one executable, one vmapped dispatch,
+        however many programs. Mixed buckets raise (name the offender,
+        don't silently fork groups); split the grid by bucket or pass
+        ``policy_axis=False`` for the PR 4 staged-constant path (one
+        group — one XLA compile — per distinct program)."""
         emulator.check_mode(mode)
         names = [p.name for p in programs]
         if len(set(names)) != len(names):
@@ -230,10 +253,35 @@ class Campaign:
             raise ValueError(
                 f"policy grid needs unique program names (records key "
                 f"on them), got duplicates {dupes}")
+        if not isinstance(trace, Trace):
+            raise ValueError(
+                f"policy grids need a Trace, got {type(trace).__name__}")
+        if "policy" in meta:
+            raise ValueError(
+                "meta key 'policy' is reserved for the program name")
+        if not policy_axis:
+            for prog in programs:
+                sysc = sys.with_policy(prog) if derive_cost \
+                    else dataclasses.replace(sys, policy=prog)
+                self.add(trace, sysc, mode, policy=prog.name, **meta)
+            return self
+        from repro.core.smcprog import table_bucket
+        buckets = {p.name: table_bucket(p.n_ops) for p in programs}
+        lb = min(buckets.values(), default=None)
         for prog in programs:
-            sysc = sys.with_policy(prog) if derive_cost \
-                else dataclasses.replace(sys, policy=prog)
-            self.add(trace, sysc, mode, policy=prog.name, **meta)
+            if buckets[prog.name] != lb:
+                raise ValueError(
+                    f"policy_axis=True needs one shared table-length "
+                    f"bucket, but program {prog.name!r} ({prog.n_ops} "
+                    f"ops) packs to bucket {buckets[prog.name]} while "
+                    f"others pack to {lb}; split the grid by bucket or "
+                    f"pass policy_axis=False")
+        for prog in programs:
+            cost = prog.smc_cycles() if derive_cost \
+                else int(sys.smc_cycles_per_decision)
+            self.points.append(Point(
+                trace, sys, mode, None, {"policy": prog.name, **meta},
+                policy=prog, policy_cost=cost))
         return self
 
     def __len__(self) -> int:
@@ -334,9 +382,14 @@ class Campaign:
                     chunk=p0.chunk or emulator.DEFAULT_STREAM_CHUNK,
                     collect=stream_collect)
             else:
+                # policy groups never mix with staged/legacy points
+                # (their group_key carries a fifth, policy element)
+                pkw = {} if p0.policy is None else dict(
+                    policies=[p.policy for p in pts],
+                    policy_costs=[p.policy_cost for p in pts])
                 gtasks = emulator.prepare_tasks(
                     [p.trace for p in pts], p0.sys, [p.mode for p in pts],
-                    blooms, outs)
+                    blooms, outs, **pkw)
             if ckpt_path is not None:
                 for gt in gtasks:
                     gt.finalize = _checkpointed(gt.finalize, outs, ckpt_path)

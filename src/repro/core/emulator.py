@@ -318,7 +318,7 @@ def _issue_frontier(t_issue, t_resp, queue, kindj, delta, dep, ptr, W,
 
 def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
                     mode: str, bloom_words, bloom_k: int, bloom_m: int,
-                    gate=None):
+                    gate=None, policy_table=None, policy_cost=None):
     """Build the per-slot transition ``EmulatorState -> EmulatorState``
     over one set of trace arrays. This is THE slot body: the single-shot
     scan (:func:`_run_core`) and the streaming windows
@@ -338,7 +338,22 @@ def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
     the whole O(L) carry per slot, which would demote the linear-time
     core back to quadratic. Predicate-threading keeps frozen slots at
     the same O(Q)+O(1) cost as live ones (and ``gate=None`` compiles to
-    exactly the pre-streaming program)."""
+    exactly the pre-streaming program).
+
+    ``policy_table`` is the PR-10 runtime-operand scheduling path: a
+    packed ``[bucket + 1, 4]`` int32 program
+    (:func:`smcprog.pack_program`) arriving as a traced OPERAND, so one
+    executable serves any program of the bucket — and vmapping it over a
+    stacked axis evaluates a whole policy grid per dispatch. It takes
+    precedence over both ``sys.policy`` (the staged-constant path) and
+    the legacy scheduler flag. Because the program content is unknown at
+    trace time, its decision cost rides along as an operand too:
+    ``policy_cost`` is an int32 ``[2]`` vector ``(counter_inc,
+    smc_latency_proc)`` — the per-decision SMC cycle-counter increment
+    and the nots-mode free-running decision latency, exactly the two
+    numbers the staged path bakes in from ``sys.smc_cycles_per_decision``
+    (derived host-side by :func:`_policy_cost_pair`, so the int
+    arithmetic is bit-identical)."""
     N = kindj.shape[0]
     t = sys.timing
     geo = sys.geometry
@@ -353,11 +368,22 @@ def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
                                  else sys.proc_per_tick_emu) * FP))
     # per-decision MC occupancy (decision *rate*) and per-response latency:
     # ts models the emulated HW MC; nots free-runs against the real SMC
-    mc_issue = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots"
-                         else sys.hwmc_issue_proc)
     mc_lat = jnp.int32(0 if mode == "nots" else sys.hwmc_latency_proc)
-    # a slow SMC batches up whatever arrived while it was busy (nots only)
-    vis_slack = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots" else 0)
+    if policy_table is not None:
+        # runtime-operand policy: SMC cost is per-policy data, not a
+        # staged constant (ts-mode issue rate models the emulated HW MC
+        # and stays policy-independent, exactly as in the staged path)
+        smc_lat = policy_cost[1]
+        mc_issue = smc_lat if mode == "nots" else jnp.int32(sys.hwmc_issue_proc)
+        vis_slack = smc_lat if mode == "nots" else jnp.int32(0)
+        counter_inc = policy_cost[0]
+    else:
+        mc_issue = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots"
+                             else sys.hwmc_issue_proc)
+        # a slow SMC batches up whatever arrived while it was busy (nots)
+        vis_slack = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots"
+                              else 0)
+        counter_inc = sys.smc_cycles_per_decision + sys.smc_transfer_cycles
     Q = max(W, 2)
 
     def step(st: EmulatorState) -> EmulatorState:
@@ -383,7 +409,15 @@ def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
         open_rows = st.bank["open_row"]
         hit_now = open_rows[q_bank] == q_row
         mit = None
-        if policy is not None:
+        if policy_table is not None:
+            # runtime-operand path: the table-driven VM interprets the
+            # packed program operand (one executable per length bucket)
+            qslot, mit = smcprog.select_slot_table(policy_table, _policy_env(
+                q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
+                st.bank["ready"], st.dram_now, st.last_bank,
+                geo.n_banks, Q, fault_hct=st.faults.get("hct"),
+                fault_seed=0 if fm is None else fm.seed), visible)
+        elif policy is not None:
             # software-defined path: the policy VM stages the program's
             # instruction table into branchless O(Q) vector ops here
             qslot, mit = smcprog.select_slot(policy, _policy_env(
@@ -471,7 +505,7 @@ def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
             hits=st.hits + jnp.where(do & hit, 1, 0),
             served_n=st.served_n + jnp.where(do, 1, 0),
             smc_fpga_cycles=st.smc_fpga_cycles + jnp.where(
-                do, sys.smc_cycles_per_decision + sys.smc_transfer_cycles, 0),
+                do, counter_inc, 0),
             last_bank=jnp.where(do, bankj[pick], st.last_bank),
             faults=fstate)
 
@@ -480,15 +514,19 @@ def _make_slot_body(kindj, bankj, rowj, deltaj, depj, sys: SystemConfig,
 
 def _run_core(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
               bloom_words, bloom_k: int, bloom_m: int,
-              slots: Optional[int] = None):
+              slots: Optional[int] = None,
+              policy_table=None, policy_cost=None):
     """One trace's single-shot scan: a fresh :class:`EmulatorState`
     driven through the shared slot body (:func:`_make_slot_body`) for
     the ``slots`` budget. Pure traceable function (jit/vmap applied by
-    the compile cache below)."""
+    the compile cache below). ``policy_table`` / ``policy_cost`` are the
+    runtime-operand policy inputs (see :func:`_make_slot_body`)."""
     N = kind.shape[0]
     W = sys.window
     step = _make_slot_body(kind, bank, row, delta, dep, sys, mode,
-                           bloom_words, bloom_k, bloom_m)
+                           bloom_words, bloom_k, bloom_m,
+                           policy_table=policy_table,
+                           policy_cost=policy_cost)
     length = (2 * N + 4) if slots is None else slots
     state, _ = jax.lax.scan(lambda st, _: (step(st), None),
                             EmulatorState.init(N, sys), None, length=length)
@@ -554,7 +592,8 @@ def _issue_frontier_ref(t_issue, t_resp, queue, kindj, delta, dep, ptr, W,
 
 
 def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
-                  bloom_words, bloom_k: int, bloom_m: int):
+                  bloom_words, bloom_k: int, bloom_m: int,
+                  policy_table=None, policy_cost=None):
     N = kind.shape[0]
     t = sys.timing
     geo = sys.geometry
@@ -566,10 +605,19 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
 
     scale_num = jnp.int32(round((sys.proc_per_tick_fpga if mode == "nots"
                                  else sys.proc_per_tick_emu) * FP))
-    mc_issue = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots"
-                         else sys.hwmc_issue_proc)
     mc_lat = jnp.int32(0 if mode == "nots" else sys.hwmc_latency_proc)
-    vis_slack = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots" else 0)
+    if policy_table is not None:
+        # runtime-operand policy cost, mirrored from _make_slot_body
+        smc_lat = policy_cost[1]
+        mc_issue = smc_lat if mode == "nots" else jnp.int32(sys.hwmc_issue_proc)
+        vis_slack = smc_lat if mode == "nots" else jnp.int32(0)
+        counter_inc = policy_cost[0]
+    else:
+        mc_issue = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots"
+                             else sys.hwmc_issue_proc)
+        vis_slack = jnp.int32(sys.smc_latency_fpga_proc if mode == "nots"
+                              else 0)
+        counter_inc = sys.smc_cycles_per_decision + sys.smc_transfer_cycles
 
     Q = max(W, 2)
     state = {
@@ -609,7 +657,15 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         open_rows = state["bank"]["open_row"]
         hit_now = open_rows[q_bank] == q_row
         mit = None
-        if policy is not None:
+        if policy_table is not None:
+            # runtime-operand branch mirrored from _make_slot_body
+            qslot, mit = smcprog.select_slot_table(policy_table, _policy_env(
+                q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
+                state["bank"]["ready"], state["dram_now"],
+                state["last_bank"], geo.n_banks, Q,
+                fault_hct=state.get("faults", {}).get("hct"),
+                fault_seed=0 if fm is None else fm.seed), visible)
+        elif policy is not None:
             qslot, mit = smcprog.select_slot(policy, _policy_env(
                 q_t, q_bank, q_row, qidx, visible, hit_now, kindj,
                 state["bank"]["ready"], state["dram_now"],
@@ -663,7 +719,7 @@ def _run_core_ref(kind, bank, row, delta, dep, sys: SystemConfig, mode: str,
         state["hits"] = state["hits"] + jnp.where(do & hit, 1, 0)
         state["served_n"] = state["served_n"] + jnp.where(do, 1, 0)
         state["smc_fpga_cycles"] = state["smc_fpga_cycles"] + jnp.where(
-            do, sys.smc_cycles_per_decision + sys.smc_transfer_cycles, 0)
+            do, counter_inc, 0)
         state["last_bank"] = jnp.where(do, bankj[pick], state["last_bank"])
         # idle-hop fix mirrored from _run_core: never hop on an empty queue
         nxt = jnp.min(q_t)
@@ -828,27 +884,77 @@ def _bloom_shape(blooms) -> Optional[tuple]:
     return ("stacked", int(np.asarray(b0[0]).shape[0]), b0[1], b0[2])
 
 
-def group_key(n: int, sys: SystemConfig, mode: str, blooms) -> tuple:
+def _policy_rt_sys(sys: SystemConfig) -> SystemConfig:
+    """Normalize a config for the runtime-operand policy path: the
+    staged policy, the legacy scheduler flag, and the per-decision SMC
+    cost are all dead in the traced program there (the table and its
+    cost arrive as operands), so they are scrubbed from the compile /
+    group key — configs differing only in those fields share ONE
+    executable, which is the whole point of the policy axis."""
+    return dataclasses.replace(sys, policy=None, scheduler="frfcfs",
+                               smc_cycles_per_decision=0)
+
+
+def _policy_cost_pair(sys: SystemConfig, cpd: int) -> tuple:
+    """Host-side derivation of the runtime ``policy_cost`` operand for a
+    policy whose ``smc_cycles_per_decision`` is ``cpd``: ``(counter_inc,
+    smc_latency_proc)``, via the exact same Python-int / float rounding
+    the staged path bakes into its constants (``smc_latency_fpga_proc``
+    does float64 math — it must happen HERE, not in traced int32 ops,
+    for bit-identity)."""
+    csys = dataclasses.replace(sys, smc_cycles_per_decision=int(cpd))
+    return (int(cpd) + int(sys.smc_transfer_cycles),
+            int(csys.smc_latency_fpga_proc))
+
+
+def _policy_shape(policy) -> Optional[tuple]:
+    """Key element for the runtime policy axis: None (no policy
+    operand) or ``("policy", table_bucket)`` — the padded table LENGTH
+    is the only traced-shape property; content never reaches the key."""
+    if policy is None:
+        return None
+    if isinstance(policy, smcprog.PolicyProgram):
+        return ("policy", smcprog.table_bucket(policy.n_ops))
+    return ("policy", int(policy))
+
+
+def group_key(n: int, sys: SystemConfig, mode: str, blooms,
+              policy=None) -> tuple:
     """Grouping key for one trace-length-n point: everything a batched
     executable is specialized on EXCEPT the batch axis and slot budget,
     which only exist once a group is assembled (run_many derives them
     per group). One source of truth with :func:`compile_key` for the
     bucket / mode / bloom-shape normalization — used by
-    :class:`repro.core.campaign.Campaign`."""
-    return (_bucket(n), sys, _norm_mode(mode), _bloom_shape(blooms))
+    :class:`repro.core.campaign.Campaign`.
+
+    ``policy`` (a :class:`smcprog.PolicyProgram` or a table bucket int)
+    selects the runtime-operand policy axis: the key then normalizes
+    ``sys`` (:func:`_policy_rt_sys`) and appends the table-length
+    bucket, so any number of same-bucket programs — whatever their
+    content or derived cost — land in ONE group."""
+    if policy is None:
+        return (_bucket(n), sys, _norm_mode(mode), _bloom_shape(blooms))
+    return (_bucket(n), _policy_rt_sys(sys), _norm_mode(mode),
+            _bloom_shape(blooms), _policy_shape(policy))
 
 
 def compile_key(bucket: int, batch: int, sys: SystemConfig, mode: str,
-                blooms, slots: Optional[int] = None) -> tuple:
+                blooms, slots: Optional[int] = None,
+                policy_bucket: Optional[int] = None) -> tuple:
     """Cache key for one batched executable (see :func:`_bloom_shape`
     for the ``blooms`` normalization). ``slots`` is the group's
     :func:`slot_budget` (None for the uniform-budget reference
-    engine). ``sys`` carries the policy program, which hashes by
+    engine). ``sys`` carries the staged policy program, which hashes by
     instruction-table content (digest semantics): same-content programs
-    share one executable, distinct programs fork the key — so a policy
-    grid runs one batched dispatch per program."""
+    share one executable, distinct programs fork the key — so a staged
+    policy grid runs one batched dispatch per program.
+    ``policy_bucket`` instead selects the runtime-operand policy axis
+    (callers pass a :func:`_policy_rt_sys`-normalized ``sys`` with it):
+    only the padded table LENGTH forks the key, so a whole grid of
+    same-bucket programs shares one executable."""
     return (bucket, slots, _batch_bucket(batch), sys, _norm_mode(mode),
-            _bloom_shape(blooms))
+            _bloom_shape(blooms),
+            None if policy_bucket is None else _policy_shape(policy_bucket))
 
 
 def cache_stats() -> dict:
@@ -906,10 +1012,11 @@ def set_cache_capacity(n: int) -> int:
     return old
 
 
-def _shard_wrap(fn, nshards: int, bshape):
+def _shard_wrap(fn, nshards: int, bshape, pshape=None):
     """Wrap a batched runner in ``shard_map`` over ``nshards`` local
     devices on the (leading) batch axis. Trace arrays shard; a shared
-    Bloom filter replicates; stacked per-trace filters shard. Inside
+    Bloom filter replicates; stacked per-trace filters shard; stacked
+    policy tables/costs (the runtime policy axis) shard. Inside
     each shard the wrapped fn sees a ``batch/nshards`` slice and vmaps
     over it exactly as in the unsharded path, so results concatenate to
     the bit-identical full batch."""
@@ -922,6 +1029,8 @@ def _shard_wrap(fn, nshards: int, bshape):
         in_specs = (spec,) * 5
     else:
         in_specs = (spec,) * 5 + (spec if bshape[0] == "stacked" else P(),)
+    if pshape is not None:
+        in_specs = in_specs + (spec, spec)
     return jax_compat.shard_map(fn, mesh=mesh, in_specs=in_specs,
                                 out_specs=spec,
                                 **jax_compat.shard_map_kwargs())
@@ -1002,29 +1111,37 @@ def _batched_fn(key: tuple, ref: bool = False):
 
 
 def _build_runner(key: tuple, ref: bool, nshards: int) -> "_CachedRunner":
-    """Construct the (lazily-compiled) runner for one cache key."""
-    _, slots, batch, sys, mode, bshape = key
+    """Construct the (lazily-compiled) runner for one cache key.
+    Argument order after the five trace arrays: the Bloom words (when
+    the key has a bloom shape), then the stacked policy tables + cost
+    pairs (when it has a policy shape) — tables/costs always ride the
+    batch axis (axis 0), one program per batch row."""
+    _, slots, batch, sys, mode, bshape, pshape = key
     core = _run_core_ref if ref else _run_core
     extra = {} if ref else {"slots": slots}
-
-    if bshape is None:
-        def fn(kind, bank, row, delta, dep):
-            return jax.vmap(lambda k, b, r, d, dp: core(
-                k, b, r, d, dp, sys, mode, None, 0, 1, **extra))(
-                kind, bank, row, delta, dep)
-    else:
+    has_bloom = bshape is not None
+    has_pol = pshape is not None
+    if has_bloom:
         stacked, _, bk, bm = bshape
         words_axis = 0 if stacked == "stacked" else None
+    axes = (0,) * 5 + ((words_axis,) if has_bloom else ()) \
+        + ((0, 0) if has_pol else ())
 
-        def fn(kind, bank, row, delta, dep, words):
-            return jax.vmap(
-                lambda k, b, r, d, dp, w: core(
-                    k, b, r, d, dp, sys, mode, w, bk, bm, **extra),
-                in_axes=(0, 0, 0, 0, 0, words_axis))(
-                kind, bank, row, delta, dep, words)
+    def one(k, b, r, d, dp, *rest):
+        i = 0
+        bloom_args = (None, 0, 1)
+        if has_bloom:
+            bloom_args = (rest[0], bk, bm)
+            i = 1
+        pol = ({"policy_table": rest[i], "policy_cost": rest[i + 1]}
+               if has_pol else {})
+        return core(k, b, r, d, dp, sys, mode, *bloom_args, **extra, **pol)
+
+    def fn(*args):
+        return jax.vmap(one, in_axes=axes)(*args)
 
     if nshards:
-        fn = _shard_wrap(fn, nshards, bshape)
+        fn = _shard_wrap(fn, nshards, bshape, pshape)
 
     # trace arrays are freshly staged from host memory every call, so the
     # executable may reuse their buffers for its outputs (bloom words can
@@ -1036,6 +1153,9 @@ def _build_runner(key: tuple, ref: bool, nshards: int) -> "_CachedRunner":
     if bshape is not None:
         wshape = (bshape[1],) if bshape[0] == "shared" else (bb, bshape[1])
         avals = avals + [(wshape, jnp.uint32)]
+    if has_pol:
+        avals = avals + [((bb, pshape[1] + 1, 4), jnp.int32),
+                         ((bb, 2), jnp.int32)]
     return _CachedRunner(jitted, avals)
 
 
@@ -1103,9 +1223,45 @@ def _check_modes(modes: Sequence[str], n: int) -> List[str]:
     return modes
 
 
+def _normalize_policies(policies, policy_costs, sys: SystemConfig, n: int):
+    """policies: None | per-trace sequence of PolicyProgram (the
+    runtime policy axis — one program PER TRACE ROW; run the same trace
+    against P programs by repeating it P times, which is what
+    :func:`run_policies` does). policy_costs: None (every row keeps
+    ``sys.smc_cycles_per_decision``, matching a staged
+    ``dataclasses.replace(sys, policy=p)``) | per-trace sequence of
+    smc_cycles_per_decision ints (pass ``p.smc_cycles()`` to match
+    staged ``sys.with_policy(p)``). Returns None or (programs, costs)."""
+    if policies is None:
+        if policy_costs is not None:
+            raise ValueError("policy_costs requires policies")
+        return None
+    policies = list(policies)
+    if len(policies) != n:
+        raise ValueError(
+            f"per-trace policies ({len(policies)}) must match "
+            f"len(traces) ({n})")
+    for p in policies:
+        if not isinstance(p, smcprog.PolicyProgram):
+            raise TypeError(
+                f"policies must be smcprog.PolicyProgram, got "
+                f"{type(p).__name__}")
+        p.validate()
+    if policy_costs is None:
+        costs = [int(sys.smc_cycles_per_decision)] * n
+    else:
+        costs = [int(c) for c in policy_costs]
+        if len(costs) != n:
+            raise ValueError(
+                f"per-trace policy_costs ({len(costs)}) must match "
+                f"len(traces) ({n})")
+    return policies, costs
+
+
 def prepare_tasks(traces: Sequence[Trace], sys: SystemConfig,
                   mode: Union[str, Sequence[str]], blooms,
                   results: List[Optional[dict]], ref: bool = False,
+                  policies=None, policy_costs=None,
                   ) -> List[executor.GroupTask]:
     """Plan one :func:`run_many`-style call into executable
     :class:`repro.core.executor.GroupTask`s WITHOUT running them.
@@ -1118,24 +1274,35 @@ def prepare_tasks(traces: Sequence[Trace], sys: SystemConfig,
     campaign executor overlap group k+1's packing with group k's
     compute. Each task finalizes into its own ``results`` slots
     (``results`` must be a list of ``len(traces)`` Nones).
+
+    With ``policies`` (see :func:`_normalize_policies`) each trace row
+    carries its own packed program + cost pair down the batch axis —
+    the runtime policy axis: grouping gains the table-length bucket,
+    ``sys`` is key-normalized (:func:`_policy_rt_sys`), and one
+    executable per (trace-bucket, mode, table-bucket) evaluates the
+    whole grid, however many distinct programs it holds.
     """
     traces = list(traces)
     n = len(traces)
     modes = _check_modes([mode] * n if isinstance(mode, str) else mode, n)
     blooms = _normalize_blooms(blooms, n)
+    pol = _normalize_policies(policies, policy_costs, sys, n)
 
-    groups: dict = {}  # (bucket, normalized mode) -> [trace index]
+    groups: dict = {}  # (bucket, normalized mode, table bucket) -> [idx]
     for i, tr in enumerate(traces):
-        groups.setdefault((_bucket(tr.n), _norm_mode(modes[i])), []).append(i)
+        lb = None if pol is None else smcprog.table_bucket(pol[0][i].n_ops)
+        groups.setdefault(
+            (_bucket(tr.n), _norm_mode(modes[i]), lb), []).append(i)
 
     tasks: List[executor.GroupTask] = []
-    for (bucket, gmode), idxs in groups.items():
+    for (bucket, gmode, lb), idxs in groups.items():
         slots = None if ref else slot_budget(
             bucket, max(traces[i].n_real for i in idxs))
-        key = compile_key(bucket, len(idxs), sys, gmode, blooms, slots)
+        gsys = sys if lb is None else _policy_rt_sys(sys)
+        key = compile_key(bucket, len(idxs), gsys, gmode, blooms, slots, lb)
         fn = _batched_fn(key, ref=ref).prime()
 
-        def pack(idxs=idxs, bucket=bucket):
+        def pack(idxs=idxs, bucket=bucket, lb=lb):
             padded = [pad_trace(traces[i], bucket) for i in idxs]
             bb = _batch_bucket(len(idxs))
             if bb > len(idxs):  # all-NOP filler rows, discarded below
@@ -1154,6 +1321,19 @@ def prepare_tasks(traces: Sequence[Trace], sys: SystemConfig,
                     words = np.concatenate(
                         [words, np.repeat(words[:1], bb - len(idxs), axis=0)])
                 args = (*stacked, jnp.asarray(words))
+            if lb is not None:
+                tables = np.stack(
+                    [smcprog.pack_program(pol[0][i], lb) for i in idxs])
+                cost = np.asarray(
+                    [_policy_cost_pair(sys, pol[1][i]) for i in idxs],
+                    np.int32)
+                if bb > len(idxs):  # filler rows repeat row 0 (discarded)
+                    tables = np.concatenate(
+                        [tables,
+                         np.repeat(tables[:1], bb - len(idxs), axis=0)])
+                    cost = np.concatenate(
+                        [cost, np.repeat(cost[:1], bb - len(idxs), axis=0)])
+                args = (*args, jnp.asarray(tables), jnp.asarray(cost))
             return args, padded
 
         def finalize(out, padded, idxs=idxs):
@@ -1161,9 +1341,10 @@ def prepare_tasks(traces: Sequence[Trace], sys: SystemConfig,
                 row = {kk: v[j] for kk, v in out.items()}
                 results[i] = _finalize(row, padded[j], sys, modes[i])
 
+        ptag = "" if lb is None else f":pol{lb}"
         tasks.append(executor.GroupTask(
             fn=fn, pack=pack, finalize=finalize,
-            label=f"b{bucket}x{len(idxs)}:{gmode}",
+            label=f"b{bucket}x{len(idxs)}:{gmode}{ptag}",
             cost=(slots or 2 * bucket + 4) * _batch_bucket(len(idxs))))
     return tasks
 
@@ -1185,7 +1366,8 @@ def _execute_entry_point(tasks, serial) -> None:
 
 def _run_grouped(traces: Sequence[Trace], sys: SystemConfig,
                  mode: Union[str, Sequence[str]], blooms,
-                 ref: bool, serial: Optional[bool] = None) -> List[dict]:
+                 ref: bool, serial: Optional[bool] = None,
+                 policies=None, policy_costs=None) -> List[dict]:
     """Shared grouped-execution path for :func:`run_many` (exact slot
     budgets) and :func:`run_ref_many` (uniform reference budgets):
     plan into group tasks, then execute — overlapped across the
@@ -1194,14 +1376,16 @@ def _run_grouped(traces: Sequence[Trace], sys: SystemConfig,
     (the executor only changes wall-clock interleaving)."""
     traces = list(traces)
     results: List[Optional[dict]] = [None] * len(traces)
-    tasks = prepare_tasks(traces, sys, mode, blooms, results, ref=ref)
+    tasks = prepare_tasks(traces, sys, mode, blooms, results, ref=ref,
+                          policies=policies, policy_costs=policy_costs)
     _execute_entry_point(tasks, serial)
     return results
 
 
 def run_many(traces: Sequence[Trace], sys: SystemConfig,
              mode: Union[str, Sequence[str]] = "ts",
-             blooms=None, serial: Optional[bool] = None) -> List[dict]:
+             blooms=None, serial: Optional[bool] = None,
+             policies=None, policy_costs=None) -> List[dict]:
     """Evaluate many traces under one ``SystemConfig`` in batched calls.
 
     ``mode`` is one of 'ts' | 'nots' | 'reference', or a per-trace
@@ -1219,17 +1403,55 @@ def run_many(traces: Sequence[Trace], sys: SystemConfig,
     ``serial=True`` forces the in-order loop (bit-identical, for A/B).
     Returns one dict per input trace, in input order, bit-identical to
     ``run(trace, sys, mode, bloom)``.
+
+    ``policies`` / ``policy_costs`` select the runtime policy axis: one
+    :class:`smcprog.PolicyProgram` per trace row, packed into a stacked
+    table operand so same-table-bucket rows share ONE executable
+    regardless of program content (see :func:`_normalize_policies` for
+    the cost semantics and :func:`run_policies` for the
+    one-trace-many-programs convenience form). Bit-identical to
+    attaching each program via ``sys.policy`` staged constants.
     """
-    return _run_grouped(traces, sys, mode, blooms, ref=False, serial=serial)
+    return _run_grouped(traces, sys, mode, blooms, ref=False, serial=serial,
+                        policies=policies, policy_costs=policy_costs)
 
 
 def run_ref_many(traces: Sequence[Trace], sys: SystemConfig,
                  mode: Union[str, Sequence[str]] = "ts",
-                 blooms=None, serial: Optional[bool] = None) -> List[dict]:
+                 blooms=None, serial: Optional[bool] = None,
+                 policies=None, policy_costs=None) -> List[dict]:
     """The pre-optimization engine over the same grouped/batched path:
     O(bucket) work per slot, uniform ``2*bucket+4`` budget. Kept for
-    bit-exactness property tests and the sim_speed steady-state A/B."""
-    return _run_grouped(traces, sys, mode, blooms, ref=True, serial=serial)
+    bit-exactness property tests and the sim_speed steady-state A/B.
+    Supports the runtime policy axis like :func:`run_many` (the
+    reference engine mirrors the table-VM branch line for line)."""
+    return _run_grouped(traces, sys, mode, blooms, ref=True, serial=serial,
+                        policies=policies, policy_costs=policy_costs)
+
+
+def run_policies(trace: Trace, sys: SystemConfig,
+                 programs: Sequence[smcprog.PolicyProgram],
+                 mode: str = "ts", bloom: Optional[tuple] = None,
+                 derive_cost: bool = True,
+                 serial: Optional[bool] = None) -> List[dict]:
+    """Evaluate ONE trace under many candidate policies in vmapped
+    policy-axis dispatches: the trace is repeated down the batch axis
+    with one packed program per row, so a 256-program sweep compiles
+    once per distinct table-length bucket (<= 3 for sanely-sized
+    programs) instead of once per program — the scaling wall of the
+    staged-constant path (ROADMAP item 5).
+
+    ``derive_cost=True`` charges each program its length-derived SMC
+    decision cost (``prog.smc_cycles()`` — matching
+    ``sys.with_policy(prog)``); False keeps ``sys``'s existing cost
+    (matching ``dataclasses.replace(sys, policy=prog)``). Returns one
+    result dict per program, in input order, bit-identical to the
+    equivalent staged-constant runs."""
+    programs = list(programs)
+    costs = ([p.smc_cycles() for p in programs] if derive_cost
+             else [sys.smc_cycles_per_decision] * len(programs))
+    return run_many([trace] * len(programs), sys, mode=mode, blooms=bloom,
+                    serial=serial, policies=programs, policy_costs=costs)
 
 
 def run(trace: Trace, sys: SystemConfig, mode: str = "ts",
@@ -1345,16 +1567,20 @@ def stream_slot_budget(chunk: int, sys: SystemConfig) -> int:
 
 def stream_compile_key(chunk: int, batch: int, sys: SystemConfig, mode: str,
                        blooms=None,
-                       dep_max: int = DEFAULT_STREAM_DEP) -> tuple:
+                       dep_max: int = DEFAULT_STREAM_DEP,
+                       policy_bucket: Optional[int] = None) -> tuple:
     """Cache key of one streaming window executable. Everything here is
     bounded by configuration — chunk, halo, slot budget, padded batch,
-    system config, normalized mode, bloom shape — and NOTHING depends on
-    total trace length: a 1M-request stream and a 10k-request stream on
-    the same config share one entry (the ``cache_stats`` regression in
-    tests/test_streaming.py pins this)."""
+    system config, normalized mode, bloom shape, policy table-length
+    bucket — and NOTHING depends on total trace length: a 1M-request
+    stream and a 10k-request stream on the same config share one entry
+    (the ``cache_stats`` regression in tests/test_streaming.py pins
+    this). ``policy_bucket`` selects the runtime policy axis (callers
+    pass a :func:`_policy_rt_sys`-normalized ``sys`` with it)."""
     return ("stream", int(chunk), stream_halo(sys, dep_max),
             stream_slot_budget(chunk, sys), _batch_bucket(batch), sys,
-            _norm_mode(mode), _bloom_shape(blooms))
+            _norm_mode(mode), _bloom_shape(blooms),
+            None if policy_bucket is None else _policy_shape(policy_bucket))
 
 
 def _stream_init(chunk: int, halo: int, sys: SystemConfig,
@@ -1377,7 +1603,8 @@ def _stream_init(chunk: int, halo: int, sys: SystemConfig,
 
 def _stream_step_core(ss: StreamState, ck, cb, cr, cd, cdep, final,
                       sys: SystemConfig, mode: str, bloom_words,
-                      bloom_k: int, bloom_m: int, chunk: int, slots: int):
+                      bloom_k: int, bloom_m: int, chunk: int, slots: int,
+                      policy_table=None, policy_cost=None):
     """One window step (see the section comment for the correctness
     argument): shift by ``chunk``, scan the freeze-gated shared slot
     body for ``slots`` steps, and emit the whole [0, L) carry.
@@ -1412,7 +1639,9 @@ def _stream_step_core(ss: StreamState, ck, cb, cr, cd, cdep, final,
     lifted = final != 0
     step = _make_slot_body(kind, bank, row, delta, dep, sys, mode,
                            bloom_words, bloom_k, bloom_m,
-                           gate=lambda st: lifted | (st.ptr <= live_cut))
+                           gate=lambda st: lifted | (st.ptr <= live_cut),
+                           policy_table=policy_table,
+                           policy_cost=policy_cost)
     emu, _ = jax.lax.scan(lambda st, _: (step(st), None), emu, None,
                           length=slots)
     # emit the full [0, L) carry every window: the consumer slices
@@ -1428,25 +1657,30 @@ def _build_stream_runner(key: tuple) -> "_CachedRunner":
     streaming cache key: :func:`_stream_step_core` vmapped over the
     padded batch axis, jitted with the carried :class:`StreamState` and
     the freshly-staged chunk arrays donated (constant device memory —
-    each window rebuilds the carry in place)."""
-    _, C, H, SL, bb, sys, mode, bshape = key
-
-    if bshape is None:
-        def fn(ss, ck, cb, cr, cd, cdep, is_final):
-            def one(s, a, b, c, d, e):
-                return _stream_step_core(s, a, b, c, d, e, is_final,
-                                         sys, mode, None, 0, 1, C, SL)
-            return jax.vmap(one)(ss, ck, cb, cr, cd, cdep)
-    else:
+    each window rebuilds the carry in place). Post-``is_final``
+    argument order matches :func:`_build_runner`: Bloom words (when
+    keyed), then stacked policy tables + cost pairs (when keyed)."""
+    _, C, H, SL, bb, sys, mode, bshape, pshape = key
+    has_bloom = bshape is not None
+    has_pol = pshape is not None
+    if has_bloom:
         stacked, _, bk, bm = bshape
         words_axis = 0 if stacked == "stacked" else None
+    axes = (0,) * 6 + ((words_axis,) if has_bloom else ()) \
+        + ((0, 0) if has_pol else ())
 
-        def fn(ss, ck, cb, cr, cd, cdep, is_final, words):
-            def one(s, a, b, c, d, e, w):
-                return _stream_step_core(s, a, b, c, d, e, is_final,
-                                         sys, mode, w, bk, bm, C, SL)
-            return jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0, words_axis))(
-                ss, ck, cb, cr, cd, cdep, words)
+    def fn(ss, ck, cb, cr, cd, cdep, is_final, *rest):
+        def one(s, a, b, c, d, e, *r):
+            i = 0
+            bloom_args = (None, 0, 1)
+            if has_bloom:
+                bloom_args = (r[0], bk, bm)
+                i = 1
+            pol = ({"policy_table": r[i], "policy_cost": r[i + 1]}
+                   if has_pol else {})
+            return _stream_step_core(s, a, b, c, d, e, is_final,
+                                     sys, mode, *bloom_args, C, SL, **pol)
+        return jax.vmap(one, in_axes=axes)(ss, ck, cb, cr, cd, cdep, *rest)
 
     jitted = jax.jit(fn, donate_argnums=(0, 1, 2, 3, 4, 5))
     avals = [lambda: _stream_init(C, H, sys, batch=bb)] + \
@@ -1454,6 +1688,9 @@ def _build_stream_runner(key: tuple) -> "_CachedRunner":
     if bshape is not None:
         wshape = (bshape[1],) if bshape[0] == "shared" else (bb, bshape[1])
         avals = avals + [(wshape, jnp.uint32)]
+    if has_pol:
+        avals = avals + [((bb, pshape[1] + 1, 4), jnp.int32),
+                         ((bb, 2), jnp.int32)]
     return _CachedRunner(jitted, avals)
 
 
@@ -1638,18 +1875,24 @@ def prepare_stream_tasks(streams: Sequence, sys: SystemConfig,
                          chunk: int = DEFAULT_STREAM_CHUNK,
                          dep_max: int = DEFAULT_STREAM_DEP,
                          collect: str = "full",
+                         policies=None, policy_costs=None,
                          ) -> List["executor.StreamTask"]:
     """Plan a :func:`run_stream_many` call into executable
     :class:`repro.core.executor.StreamTask`s WITHOUT running them —
     the streaming analogue of :func:`prepare_tasks`: grouping (by
     normalized mode only — there is no length bucket, that is the
-    point), runner resolution and priming on the caller's thread, and
-    closures that feed windows / consume emitted blocks / finalize
-    per-stream records into disjoint ``results`` slots."""
+    point — plus the policy table bucket when the runtime policy axis
+    rides along), runner resolution and priming on the caller's thread,
+    and closures that feed windows / consume emitted blocks / finalize
+    per-stream records into disjoint ``results`` slots. ``policies`` /
+    ``policy_costs`` are per-STREAM (one program per stream row, see
+    :func:`_normalize_policies`); the packed tables are per-group
+    constants appended to every window's arguments."""
     streams = list(streams)
     n = len(streams)
     modes = _check_modes([mode] * n if isinstance(mode, str) else mode, n)
     blooms = _normalize_blooms(blooms, n)
+    pol = _normalize_policies(policies, policy_costs, sys, n)
     H = stream_halo(sys, dep_max)
     if not isinstance(chunk, (int, np.integer)) or isinstance(chunk, bool) \
             or chunk < H:
@@ -1666,12 +1909,14 @@ def prepare_stream_tasks(streams: Sequence, sys: SystemConfig,
 
     groups: dict = {}
     for i in range(n):
-        groups.setdefault(_norm_mode(modes[i]), []).append(i)
+        lb = None if pol is None else smcprog.table_bucket(pol[0][i].n_ops)
+        groups.setdefault((_norm_mode(modes[i]), lb), []).append(i)
 
     tasks: List[executor.StreamTask] = []
-    for gmode, idxs in groups.items():
-        key = stream_compile_key(chunk, len(idxs), sys, gmode, blooms,
-                                 dep_max)
+    for (gmode, lb), idxs in groups.items():
+        gsys = sys if lb is None else _policy_rt_sys(sys)
+        key = stream_compile_key(chunk, len(idxs), gsys, gmode, blooms,
+                                 dep_max, lb)
         fn = _stream_fn(key).prime()
         bb = _batch_bucket(len(idxs))
         if blooms is None:
@@ -1684,6 +1929,17 @@ def prepare_stream_tasks(streams: Sequence, sys: SystemConfig,
                 words = np.concatenate(
                     [words, np.repeat(words[:1], bb - len(idxs), axis=0)])
             wargs = (jnp.asarray(words),)
+        if lb is not None:  # per-group policy operands, shared by windows
+            tables = np.stack(
+                [smcprog.pack_program(pol[0][i], lb) for i in idxs])
+            cost = np.asarray(
+                [_policy_cost_pair(sys, pol[1][i]) for i in idxs], np.int32)
+            if bb > len(idxs):
+                tables = np.concatenate(
+                    [tables, np.repeat(tables[:1], bb - len(idxs), axis=0)])
+                cost = np.concatenate(
+                    [cost, np.repeat(cost[:1], bb - len(idxs), axis=0)])
+            wargs = wargs + (jnp.asarray(tables), jnp.asarray(cost))
 
         def pack(idxs=idxs, bb=bb):
             ctx = {
@@ -1765,9 +2021,11 @@ def prepare_stream_tasks(streams: Sequence, sys: SystemConfig,
                     results[i]["bit_error_rate"] = \
                         int(frow["vptr"]) / max(int(served[j]), 1)
 
+        ptag = "" if lb is None else f":pol{lb}"
         tasks.append(executor.StreamTask(
             fn=fn, pack=pack, windows=windows, consume=consume,
-            finalize=finalize, label=f"stream:c{chunk}x{len(idxs)}:{gmode}",
+            finalize=finalize,
+            label=f"stream:c{chunk}x{len(idxs)}:{gmode}{ptag}",
             cost=SL * bb))
     return tasks
 
@@ -1777,7 +2035,8 @@ def run_stream_many(streams: Sequence, sys: SystemConfig,
                     chunk: int = DEFAULT_STREAM_CHUNK,
                     dep_max: int = DEFAULT_STREAM_DEP,
                     collect: str = "full",
-                    serial: Optional[bool] = None) -> List[dict]:
+                    serial: Optional[bool] = None,
+                    policies=None, policy_costs=None) -> List[dict]:
     """Evaluate many UNBOUNDED traces under one ``SystemConfig`` in
     lockstep constant-memory windows.
 
@@ -1807,7 +2066,8 @@ def run_stream_many(streams: Sequence, sys: SystemConfig,
     results: List[Optional[dict]] = [None] * len(streams)
     tasks = prepare_stream_tasks(streams, sys, mode, blooms, results,
                                  chunk=chunk, dep_max=dep_max,
-                                 collect=collect)
+                                 collect=collect, policies=policies,
+                                 policy_costs=policy_costs)
     _execute_entry_point(tasks, serial)
     return results
 

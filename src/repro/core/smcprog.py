@@ -11,17 +11,33 @@ body over the Q visible hardware-queue slots.
 Execution model
 ---------------
 
-The assembled table is a compile-time constant of the jitted emulator
-program: its content rides in the compile key through ``SystemConfig``
-(a :class:`PolicyProgram` is hashed/compared by table content, not by
-name, so two same-content programs share one cached executable). The
-evaluator (:func:`evaluate`) unrolls a fixed ``len(table)``-trip loop
-over the rows at staging time and emits straight-line, branch-free
-vector arithmetic over the Q queue slots — an interpreter while tracing,
-a branchless dataflow program at run time. Every instruction is O(Q)
-int32 work, so a policy adds O(L * Q) per scheduling slot and preserves
-the engine's O(Q)+O(1) per-slot invariant (L = program length, a small
-constant).
+Two execution paths share one semantics:
+
+* **Staged constant** (PR 4): the table is a compile-time constant of
+  the jitted emulator program; its content rides in the compile key
+  through ``SystemConfig`` (a :class:`PolicyProgram` is hashed/compared
+  by table content, not by name, so two same-content programs share one
+  cached executable). The evaluator (:func:`evaluate`) unrolls a fixed
+  ``len(table)``-trip loop over the rows at staging time and emits
+  straight-line, branch-free vector arithmetic over the Q queue slots —
+  an interpreter while tracing, a branchless dataflow program at run
+  time.
+* **Runtime operand** (PR 10): the table is packed into a dense int32
+  array (:func:`pack_program`, padded to a :func:`table_bucket` length
+  so only the BUCKET — never the content — reaches the compile key) and
+  interpreted by :func:`evaluate_table`, a branchless table-driven VM:
+  each row gathers its operands dynamically and selects among every
+  opcode's candidate result. One compiled executable then evaluates ANY
+  program of that bucket — and ``jax.vmap`` over stacked packed tables
+  evaluates hundreds of candidate policies per dispatch
+  (``emulator.run_policies``). Bit-identical to the staged path by
+  construction: identical int32 candidate arithmetic, exact selects.
+
+Every instruction is O(Q) int32 work either way, so a policy adds
+O(L * Q) per scheduling slot and preserves the engine's O(Q)+O(1)
+per-slot invariant (L = program length / bucket, a small constant; the
+runtime VM pays a constant-factor premium — all opcode candidates per
+row — which the policy axis amortizes across the batch).
 
 A program produces a per-slot ``score`` (int32, lower = served first)
 and an optional ``boost`` mask (nonzero = preferred class). Selection is
@@ -65,9 +81,31 @@ Quickstart — a custom policy in ~20 lines::
     out = run(trace, sysc, "ts")
     print(prog.smc_cycles(), prog.digest, prog.describe())
 
+Quickstart — 256 candidate policies, ONE compiled dispatch (the
+runtime-operand axis; table content is data, only the length bucket
+rides the compile key), then a short autotune run::
+
+    from repro.core import emulator
+    from repro.core.policysearch import random_program, search
+    import numpy as np
+
+    rng = np.random.RandomState(0)
+    progs = [random_program(rng, name=f"cand{i}") for i in range(256)]
+    recs = emulator.run_policies(trace, JETSON_NANO, progs, mode="ts")
+    best = min(recs, key=lambda r: float(r["avg_load_latency_cycles"]))
+
+    res = search(trace, JETSON_NANO, generations=5, population=16)
+    print(res.summary())           # tuned-vs-baseline table
+    print(res.best.describe())     # the winning schedule, one dispatch
+                                   # per generation under the hood
+
+(Full walkthrough: ``examples/policy_lab.py``.)
+
 Sweeping a grid of policies goes through
-:meth:`repro.core.campaign.Campaign.add_policy_grid` — one batched
-dispatch per compile-key group. Built-ins: :func:`frfcfs_program`,
+:meth:`repro.core.campaign.Campaign.add_policy_grid` — by default one
+vmapped policy-axis dispatch per (trace, mode) with programs sharing a
+table bucket; ``policy_axis=False`` selects the staged per-program
+path. Built-ins: :func:`frfcfs_program`,
 :func:`fcfs_program`, :func:`bank_round_robin_program`,
 :func:`open_page_program`, :func:`closed_page_program`,
 :func:`write_drain_program` (see :func:`builtin_programs`).
@@ -76,8 +114,11 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
+import numpy as np
+
+import jax
 import jax.numpy as jnp
 
 # Same sentinel value as repro.core.emulator.BIG — but a plain Python
@@ -198,14 +239,21 @@ class PolicyProgram:
         return any(row[0] == opcode for row in self.table)
 
     def validate(self) -> "PolicyProgram":
+        """Structural check; errors carry the table row index AND the
+        decoded op name (``row 3 (op_add): ...``) so search-generated
+        invalid programs point straight at the offending instruction."""
         n = len(self.table)
         if not 0 <= self.score_reg < n:
-            raise ValueError(f"score_reg {self.score_reg} out of range")
+            raise ValueError(f"score_reg {self.score_reg} out of range "
+                             f"for a {n}-row table")
         if not -1 <= self.boost_reg < n:
-            raise ValueError(f"boost_reg {self.boost_reg} out of range")
+            raise ValueError(f"boost_reg {self.boost_reg} out of range "
+                             f"for a {n}-row table")
         if not -1 <= self.mitigate_reg < n:
-            raise ValueError(f"mitigate_reg {self.mitigate_reg} out of range")
+            raise ValueError(f"mitigate_reg {self.mitigate_reg} out of "
+                             f"range for a {n}-row table")
         for i, (op, a, b, imm) in enumerate(self.table):
+            nm = _OP_NAMES.get(op, f"op{op}").lower()
             if op != OP_CONST and op not in _LOAD_NAMES \
                     and op not in _UNARY and op not in _BINARY \
                     and op != OP_SELECT:
@@ -216,9 +264,10 @@ class PolicyProgram:
             for r in refs:
                 if not 0 <= r < i:
                     raise ValueError(
-                        f"row {i}: operand {r} is not an earlier value")
+                        f"row {i} ({nm}): operand {r} is not an earlier "
+                        f"value")
             if op == OP_CONST and not _INT32_MIN <= imm <= _INT32_MAX:
-                raise ValueError(f"row {i}: imm {imm} not int32")
+                raise ValueError(f"row {i} ({nm}): imm {imm} not int32")
         return self
 
     def describe(self) -> str:
@@ -470,6 +519,160 @@ def select_slot(prog: PolicyProgram, env: Dict, visible):
     slot_all = jnp.argmin(key_all).astype(jnp.int32)
     qslot = jnp.where(jnp.any(boost_on), slot_boost, slot_all)
     return qslot, (None if mit is None else mit[qslot] != 0)
+
+
+# ---------------------------------------------------------------------------
+# Runtime-operand path (PR 10): pack a program into a dense int32 array
+# and interpret it with a table-driven VM. Only the PADDED LENGTH of the
+# table (its bucket) is a traced-shape property; the content is a plain
+# runtime operand, so one compiled emulator evaluates any program of a
+# bucket — and a vmap over stacked tables evaluates a whole policy grid.
+# ---------------------------------------------------------------------------
+
+# Smallest bucket: all built-ins fit in 8 rows, and a floor keeps the
+# number of distinct buckets (== distinct compile keys) tiny.
+TABLE_BUCKET_FLOOR = 8
+
+# Environment loads in opcode order — row `op - OP_AGE` of the stacked
+# env matrix. Contiguity of OP_AGE..OP_PARA_RAND is load-bearing here.
+_ENV_ORDER = tuple(_LOAD_NAMES[op] for op in range(OP_AGE, OP_PARA_RAND + 1))
+N_LOADS = len(_ENV_ORDER)
+
+
+def table_bucket(n_ops: int) -> int:
+    """Padded table length for an ``n_ops``-row program: the next power
+    of two, floored at :data:`TABLE_BUCKET_FLOOR`. The bucket — never
+    the content — rides the compile key."""
+    if n_ops < 1:
+        raise ValueError(f"n_ops must be >= 1, got {n_ops}")
+    b = TABLE_BUCKET_FLOOR
+    while b < n_ops:
+        b *= 2
+    return b
+
+
+def pack_program(prog: PolicyProgram,
+                 bucket: Optional[int] = None) -> np.ndarray:
+    """Pack a validated program into the runtime-operand layout: an
+    int32 ``[bucket + 1, 4]`` array whose row 0 is the header
+    ``(n_ops, score_reg, boost_reg, mitigate_reg)`` and rows 1.. are the
+    instruction table padded with ``(OP_CONST, 0, 0, 0)`` no-ops (they
+    execute — producing zeros no live row references — so the VM needs
+    no length gate)."""
+    prog.validate()
+    lb = table_bucket(prog.n_ops) if bucket is None else int(bucket)
+    if prog.n_ops > lb:
+        raise ValueError(
+            f"program {prog.name!r} has {prog.n_ops} ops; bucket {lb} "
+            f"is too small (needs {table_bucket(prog.n_ops)})")
+    out = np.zeros((lb + 1, 4), np.int32)
+    out[0] = (prog.n_ops, prog.score_reg, prog.boost_reg,
+              prog.mitigate_reg)
+    for i, row in enumerate(prog.table):
+        out[i + 1] = row
+    return out
+
+
+def pack_stack(progs: Sequence[PolicyProgram],
+               bucket: Optional[int] = None) -> np.ndarray:
+    """Stack packed programs into one ``[P, bucket + 1, 4]`` int32 array
+    — the policy-axis operand. ``bucket`` defaults to the max bucket
+    over the programs (callers that must NOT silently merge buckets,
+    e.g. ``Campaign.add_policy_grid``, group first and pass it)."""
+    if not progs:
+        raise ValueError("pack_stack needs at least one program")
+    lb = (max(table_bucket(p.n_ops) for p in progs)
+          if bucket is None else int(bucket))
+    return np.stack([pack_program(p, lb) for p in progs])
+
+
+def eval_table_rows(rows, envm):
+    """The table-driven VM core: interpret ``rows`` ([L, 4] int32
+    instructions) over ``envm`` ([N_LOADS, Q] int32 stacked environment)
+    and return all SSA values as [L, Q] int32. Branchless — every row
+    computes every opcode's candidate and selects by opcode — so it
+    traces to a fixed dataflow program regardless of table content.
+    Candidate arithmetic matches :func:`evaluate` op for op (int32
+    wraparound included), which is what makes the runtime path
+    bit-identical to the staged path. Shared verbatim by
+    :func:`evaluate_table` and the ``kernels/policy_vm`` Pallas kernel
+    (single source of semantics)."""
+    L = rows.shape[0]
+    q = envm.shape[1]
+
+    def body(i, vals):
+        op = rows[i, 0]
+        a = jnp.clip(rows[i, 1], 0, L - 1)
+        b = jnp.clip(rows[i, 2], 0, L - 1)
+        imm = rows[i, 3]
+        va = vals[a]
+        vb = vals[b]
+        vc = vals[jnp.clip(imm, 0, L - 1)]
+        # OP_CONST is the default arm (also the padding no-op).
+        v = jnp.zeros((q,), jnp.int32) + imm
+        is_load = (op >= OP_AGE) & (op <= OP_PARA_RAND)
+        v = jnp.where(is_load,
+                      envm[jnp.clip(op - OP_AGE, 0, N_LOADS - 1)], v)
+        for code, cand in (
+                (OP_ADD, va + vb),
+                (OP_SUB, va - vb),
+                (OP_MUL, va * vb),
+                (OP_MIN, jnp.minimum(va, vb)),
+                (OP_MAX, jnp.maximum(va, vb)),
+                (OP_AND, va & vb),
+                (OP_OR, va | vb),
+                (OP_NOT, (va == 0).astype(jnp.int32)),
+                (OP_EQ, (va == vb).astype(jnp.int32)),
+                (OP_LT, (va < vb).astype(jnp.int32)),
+                (OP_GE, (va >= vb).astype(jnp.int32)),
+                (OP_SELECT, jnp.where(va != 0, vb, vc)),
+        ):
+            v = jnp.where(op == code, cand, v)
+        return vals.at[i].set(v.astype(jnp.int32))
+
+    return jax.lax.fori_loop(0, L, body, jnp.zeros((L, q), jnp.int32))
+
+
+def evaluate_table(table, env: Dict):
+    """Runtime-operand counterpart of :func:`evaluate`: run a packed
+    ``[L + 1, 4]`` table (header + rows, :func:`pack_program` layout)
+    over the scheduling environment. Returns ``(score, boost, mitigate)``
+    [Q] int32 vectors; unlike the staged path, mitigate is always a
+    vector (all-zero when the program declared none) — the table content
+    is not known at trace time, and an always-False mitigate flag is
+    numerically identical to None in ``faults.apply_slot``. Evaluates
+    every environment thunk (the stacked env matrix is shared across the
+    whole policy axis, so the cost amortizes)."""
+    table = jnp.asarray(table, jnp.int32)
+    hdr = table[0]
+    rows = table[1:]
+    lb = rows.shape[0]
+    envm = jnp.stack([jnp.asarray(env[nm]()).astype(jnp.int32)
+                      for nm in _ENV_ORDER])
+    vals = eval_table_rows(rows, envm)
+    score = vals[jnp.clip(hdr[1], 0, lb - 1)]
+    zero = jnp.zeros_like(score)
+    boost = jnp.where(hdr[2] >= 0, vals[jnp.clip(hdr[2], 0, lb - 1)], zero)
+    mit = jnp.where(hdr[3] >= 0, vals[jnp.clip(hdr[3], 0, lb - 1)], zero)
+    return score, boost, mit
+
+
+def select_slot_table(table, env: Dict, visible):
+    """Runtime-operand counterpart of :func:`select_slot`: identical
+    two-level argmin (clamp, boosted-first, else all-visible). Returns
+    ``(qslot, mitigate_flag)`` where the flag is a traced scalar bool —
+    always present, always False for programs without a mitigate
+    register (bit-identical to the staged path's None, see
+    ``faults.apply_slot``)."""
+    score, boost, mit = evaluate_table(table, env)
+    score = jnp.minimum(score, BIG - 1)
+    key_all = jnp.where(visible, score, BIG)
+    boost_on = visible & (boost != 0)
+    key_boost = jnp.where(boost_on, score, BIG)
+    slot_boost = jnp.argmin(key_boost).astype(jnp.int32)
+    slot_all = jnp.argmin(key_all).astype(jnp.int32)
+    qslot = jnp.where(jnp.any(boost_on), slot_boost, slot_all)
+    return qslot, mit[qslot] != 0
 
 
 # ---------------------------------------------------------------------------

@@ -26,7 +26,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import smcprog, traces
-from repro.core.campaign import Campaign
+from repro.core.campaign import Campaign, Point
 from repro.core.bloom import BloomFilter
 from repro.core.dram import Geometry
 from repro.core.faults import FaultModel
@@ -138,14 +138,20 @@ class SchedulingPolicyStudy:
         self.baseline = baseline
 
     def evaluate_traces(self, trs: Sequence, mode: str = "ts",
-                        derive_cost: bool = True) -> List[Dict]:
+                        derive_cost: bool = True,
+                        policy_axis: bool = True) -> List[Dict]:
         """Returns one dict per trace, in input order:
         ``{policy_name: {exec_cycles, row_hits, smc_cycles,
-        speedup_vs_baseline}}``."""
+        speedup_vs_baseline}}``. ``policy_axis=True`` (default) rides
+        the runtime policy operand — the whole program grid shares one
+        compiled executable and one dispatch per trace-length bucket;
+        ``policy_axis=False`` keeps the staged-constant path (one
+        compile per program). Results are bit-identical either way."""
         c = Campaign()
         for i, tr in enumerate(trs):
             c.add_policy_grid(tr, self.sys, self.programs, mode=mode,
-                              derive_cost=derive_cost, i=i)
+                              derive_cost=derive_cost,
+                              policy_axis=policy_axis, i=i)
         recs = {(r["i"], r["policy"]): r for r in c.run()}
         cost = {p.name: p.smc_cycles() if derive_cost
                 else self.sys.smc_cycles_per_decision for p in self.programs}
@@ -211,21 +217,36 @@ class RowHammerMitigationStudy:
 
     def evaluate(self, intensities: Sequence[float] = (0.45, 0.9),
                  n_requests: int = 480, mode: str = "ts", seed: int = 0,
-                 derive_cost: bool = True, **run_kw) -> List[dict]:
+                 derive_cost: bool = True, policy_axis: bool = True,
+                 **run_kw) -> List[dict]:
         """One record per intensity, in order: ``{'intensity': f,
         <program>: {bit_error_rate, flips, mitigations, exec_cycles,
         exec_seconds, slowdown_vs_unmitigated}}``. All points run as one
-        batched campaign — one compile per program (intensities share
-        each program's compile-key group). ``run_kw`` passes through to
-        :meth:`Campaign.run` (``checkpoint=...`` resumes a killed
-        sweep)."""
+        batched campaign. ``policy_axis=True`` (default) carries each
+        mitigation program as a runtime operand, so every (program x
+        intensity) point sharing a table-length bucket shares ONE
+        compiled executable and dispatch; ``policy_axis=False`` keeps
+        the staged path (one compile per program). ``run_kw`` passes
+        through to :meth:`Campaign.run` (``checkpoint=...`` resumes a
+        killed sweep)."""
         import dataclasses as _dc
         c = Campaign()
+        sysf = self.sys.with_faults(self.fault_model)
         for i, inten in enumerate(intensities):
             tr = traces.rowhammer_trace(n_requests, self.geo,
                                         intensity=float(inten),
                                         seed=seed + i)
             for name, prog in self.programs.items():
+                if policy_axis:
+                    cost = prog.smc_cycles() if derive_cost \
+                        else int(self.sys.smc_cycles_per_decision)
+                    # direct Point append: the dict key (not prog.name)
+                    # labels the record, and mixed table buckets simply
+                    # fork into per-bucket groups here
+                    c.points.append(Point(
+                        tr, sysf, mode, None, {"mitigation": name, "i": i},
+                        policy=prog, policy_cost=cost))
+                    continue
                 sysc = self.sys.with_policy(prog) if derive_cost \
                     else _dc.replace(self.sys, policy=prog)
                 c.add(tr, sysc.with_faults(self.fault_model), mode,

@@ -1,0 +1,65 @@
+"""Policy-VM batch evaluation as a Pallas kernel (the policy-axis hot
+spot: many packed policy tables × one queue-environment matrix).
+
+One grid cell evaluates ONE packed program — the ``[L + 1, 4]`` header +
+instruction table pins in VMEM next to the shared ``[N_LOADS, Q]``
+environment block, and the cell interprets the table with the exact
+:func:`repro.core.smcprog.eval_table_rows` dataflow (imported, not
+re-implemented — single source of VM semantics, so kernel == reference
+bit-identity is structural, not coincidental). Output per cell is the
+``(score, boost, mitigate)`` triple the scheduler's argmin consumes.
+
+On CPU (this container) the kernel runs in interpret mode for
+correctness validation; on TPU the same call compiles to Mosaic. The
+batched use case is offline policy screening (``core.policysearch``
+scoring hundreds of candidate tables against captured queue snapshots)
+— inside the emulator's scan the per-decision environment is a single
+[Q] vector, far below kernel launch granularity, so the engine keeps
+its inline VM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.smcprog import N_LOADS, eval_table_rows
+
+
+def _kernel(table_ref, env_ref, out_ref):
+    table = table_ref[0]                  # [L + 1, 4] int32
+    envm = env_ref[...]                   # [N_LOADS, Q] int32
+    hdr = table[0]
+    rows = table[1:]
+    lb = rows.shape[0]
+    vals = eval_table_rows(rows, envm)    # [L, Q] int32
+    score = vals[jnp.clip(hdr[1], 0, lb - 1)]
+    zero = jnp.zeros_like(score)
+    boost = jnp.where(hdr[2] >= 0, vals[jnp.clip(hdr[2], 0, lb - 1)], zero)
+    mit = jnp.where(hdr[3] >= 0, vals[jnp.clip(hdr[3], 0, lb - 1)], zero)
+    out_ref[0] = jnp.stack([score, boost, mit])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def policy_vm_scores(tables, envm, interpret=False):
+    """tables: [P, L + 1, 4] int32 packed programs
+    (:func:`repro.core.smcprog.pack_stack` layout); envm: [N_LOADS, Q]
+    int32 shared environment -> [P, 3, Q] int32 (score, boost,
+    mitigate) per program."""
+    tables = jnp.asarray(tables, jnp.int32)
+    envm = jnp.asarray(envm, jnp.int32)
+    P, L1, _ = tables.shape
+    Q = envm.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((1, L1, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((N_LOADS, Q), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 3, Q), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, 3, Q), jnp.int32),
+        interpret=interpret,
+    )(tables, envm)

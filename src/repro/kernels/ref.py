@@ -30,3 +30,27 @@ def bloom_probe_ref(words, keys, k: int, m_bits: int):
 
 def rowclone_copy_ref(x):
     return x
+
+
+def policy_vm_ref(tables, envm):
+    """Pure-jnp oracle for ``policy_vm_scores``: vmap of the table VM
+    over the program axis. tables [P, L+1, 4], envm [N_LOADS, Q] ->
+    [P, 3, Q] int32 (score, boost, mitigate)."""
+    from repro.core.smcprog import eval_table_rows
+    tables = jnp.asarray(tables, jnp.int32)
+    envm = jnp.asarray(envm, jnp.int32)
+
+    def one(table):
+        hdr = table[0]
+        rows = table[1:]
+        lb = rows.shape[0]
+        vals = eval_table_rows(rows, envm)
+        score = vals[jnp.clip(hdr[1], 0, lb - 1)]
+        zero = jnp.zeros_like(score)
+        boost = jnp.where(hdr[2] >= 0,
+                          vals[jnp.clip(hdr[2], 0, lb - 1)], zero)
+        mit = jnp.where(hdr[3] >= 0,
+                        vals[jnp.clip(hdr[3], 0, lb - 1)], zero)
+        return jnp.stack([score, boost, mit])
+
+    return jax.vmap(one)(tables)

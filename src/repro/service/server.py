@@ -253,6 +253,7 @@ class SweepServer:
         self._n_loaded = 0
         self._n_points_dispatched = 0
         self._n_client_slots = 0       # sum over dispatches of distinct clients
+        self._n_policy_slots = 0       # runtime-policy-axis points dispatched
         self._groups: Dict[str, Dict[str, int]] = {}
         self._latencies: "collections.deque[float]" = \
             collections.deque(maxlen=4096)
@@ -461,9 +462,15 @@ class SweepServer:
             if p0.bloom is not None:
                 same = all(p.bloom is p0.bloom for p in pts)
                 blooms = p0.bloom if same else [p.bloom for p in pts]
+            # runtime policy axis: policy points group apart from
+            # staged/legacy ones (their group_key carries a policy
+            # shape element), so a whole dispatch rides the axis
+            pkw = {} if p0.policy is None else dict(
+                policies=[p.policy for p in pts],
+                policy_costs=[p.policy_cost for p in pts])
             tasks = emulator.prepare_tasks(
                 [p.trace for p in pts], p0.sys, [p.mode for p in pts],
-                blooms, disp.outs)
+                blooms, disp.outs, **pkw)
             if ckpt_path is not None:
                 for t in tasks:
                     t.finalize = _campaign._checkpointed(
@@ -522,10 +529,14 @@ class SweepServer:
             self._n_points_dispatched += len(disp.jobs)
             names = {j.client for j in disp.jobs}
             self._n_client_slots += len(names)
+            npol = sum(1 for j in disp.jobs if j.point.policy is not None)
+            self._n_policy_slots += npol
             g = self._groups.setdefault(
-                _group_label(disp.key), {"points": 0, "dispatches": 0})
+                _group_label(disp.key),
+                {"points": 0, "dispatches": 0, "policies": 0})
             g["points"] += len(disp.jobs)
             g["dispatches"] += 1
+            g["policies"] += npol
             for job in disp.jobs:
                 c = self._clients.get(job.client)
                 if c is not None:
@@ -650,6 +661,7 @@ class SweepServer:
                 "dispatches": {
                     "count": nd, "loaded_from_checkpoint": self._n_loaded,
                     "points": self._n_points_dispatched,
+                    "policy_points": self._n_policy_slots,
                     "inflight": len(self._inflight),
                     "bucketed": sum(len(b.jobs)
                                     for b in self._buckets.values()),
@@ -657,6 +669,11 @@ class SweepServer:
                 "points_per_dispatch": (self._n_points_dispatched / nd
                                         if nd else 0.0),
                 "coalesce_ratio": (self._n_client_slots / nd if nd else 0.0),
+                # runtime-policy-axis coalescing: mean policy-operand
+                # points per dispatch (mirrors clients_per_dispatch; a
+                # 256-policy one-dispatch sweep shows 256.0 here)
+                "policies_per_dispatch": (self._n_policy_slots / nd
+                                          if nd else 0.0),
                 "rejected": sum(c.rejected for c in self._clients.values()),
                 "latency_ms": {
                     "p50": round(pct(0.50) * 1e3, 3),

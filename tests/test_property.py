@@ -278,6 +278,60 @@ def test_stream_bit_identical_to_single_shot(seed, n, chunk, window, mode,
     np.testing.assert_array_equal(a["t_issue"][:n], s["t_issue"])
 
 
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(4, 70),
+       st.sampled_from(["ts", "nots"]), st.booleans(), st.booleans())
+def test_policy_axis_bit_identical_to_staged(seed, n, mode, faults,
+                                             streaming):
+    """ISSUE 10 anchor: staged-constant VM == runtime-operand VM ==
+    vmapped policy axis, bit for bit — over random PolicyBuilder
+    programs (mixed table-length buckets included), ts/nots, faults
+    on/off, and the streaming chunked-window driver. The policy table
+    is DATA on the runtime path; this property is what licenses sweeping
+    hundreds of policies through one executable."""
+    import dataclasses
+    from repro.core import emulator, smcprog
+    from repro.core.faults import FaultModel
+    from repro.core.policysearch import random_program
+    rng = np.random.RandomState(seed % (2 ** 31))
+    tr = Trace.of(kind=rng.randint(0, 5, n), bank=rng.randint(0, 16, n),
+                  row=rng.randint(0, 4096, n), delta=rng.randint(0, 24, n),
+                  dep=rng.randint(0, 3, n))
+    progs = [random_program(rng, name=f"p{i}") for i in range(3)]
+    if rng.rand() < 0.5:  # force a second (16-row) table bucket
+        b = smcprog.PolicyBuilder()
+        v = b.score_age()
+        for _ in range(5):
+            v = b.add(v, b.mul(v, v))
+        progs.append(b.build(score=v, name="wide"))
+    sysc = JETSON_NANO
+    if faults:
+        sysc = sysc.with_faults(FaultModel(
+            seed=int(seed % 97), hammer_threshold=64,
+            hammer_flip_fp=30000, weak_fp=200))
+        progs += list(smcprog.mitigation_programs().values())
+    axis = emulator.run_policies(tr, sysc, progs, mode=mode,
+                                 derive_cost=False, serial=True)
+    costs = [int(sysc.smc_cycles_per_decision)] * len(progs)
+    for p, r in zip(progs, axis):
+        staged = run(tr, dataclasses.replace(sysc, policy=p), mode)
+        for k in ("exec_cycles", "row_hits", "served", "dram_ticks",
+                  "smc_fpga_cycles"):
+            assert int(staged[k]) == int(r[k]), (p.name, k)
+        np.testing.assert_array_equal(staged["t_resp"][:n],
+                                      r["t_resp"][:n])
+        np.testing.assert_array_equal(staged["t_issue"][:n],
+                                      r["t_issue"][:n])
+    if streaming:
+        chunk = int(rng.randint(8, 64))
+        stream = emulator.run_stream_many(
+            [tr] * len(progs), sysc, mode, chunk=chunk, dep_max=3,
+            policies=progs, policy_costs=costs, serial=True)
+        for p, a, s in zip(progs, axis, stream):
+            assert int(a["exec_cycles"]) == int(s["exec_cycles"]), p.name
+            np.testing.assert_array_equal(a["t_resp"][:n], s["t_resp"])
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 1000))
 def test_emulator_deterministic(seed):

@@ -147,12 +147,17 @@ class TestPolicyGrid:
     batched dispatch per compile-key group (content-addressed)."""
 
     def test_grid_one_dispatch_per_program(self):
+        """The staged-constant (legacy) path: policy_axis=False keeps
+        one compile-key group — one compile, one dispatch — per
+        program. The runtime-axis default's contract (one group per
+        table-length bucket) is pinned in tests/test_policy_axis.py."""
         programs = list(smcprog.builtin_programs().values())
         assert len(programs) >= 4
         trs = [bursty_trace(seed=s) for s in (0, 1)]
         c = Campaign()
         for i, tr in enumerate(trs):
-            c.add_policy_grid(tr, JETSON_NANO, programs, i=i)
+            c.add_policy_grid(tr, JETSON_NANO, programs, i=i,
+                              policy_axis=False)
         assert c.n_groups() == len(programs)
         emulator.cache_clear()
         recs = c.run()
